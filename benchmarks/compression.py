@@ -1,0 +1,104 @@
+"""Paper-table benchmarks (Table II, Fig 6, Fig 7, §V-D match-rate).
+
+Synthetic corpora stand in for loghub (offline container, DESIGN.md §6.4):
+absolute CRs differ from the paper; the validation targets are the
+ORDERINGS and ablation shapes. Sizes are scaled down (default ~8 MB per
+dataset) to finish on one CPU core; pass --lines to scale up.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.baselines import cowic_like, kernel_baseline, logarchive_like
+from repro.core.codec import LogzipConfig, compress, read_structured
+from repro.core.ise import ISEConfig
+from repro.core.parallel import compress_parallel
+from repro.data.loggen import DATASETS, generate_lines
+
+ISE_FAST = ISEConfig(sample_rate=0.01, min_sample=400, max_iters=4)
+
+
+def _corpus(name: str, n_lines: int, seed: int = 0):
+    lines = list(generate_lines(name, n_lines, seed))
+    raw = sum(len(l.encode()) + 1 for l in lines) - 1
+    return lines, raw
+
+
+def table2(n_lines: int = 40000) -> list[dict]:
+    """Table II: CR of raw kernels, Cowic/LogArchive-like, logzip(level 3)."""
+    rows = []
+    for name in DATASETS:
+        lines, raw = _corpus(name, n_lines)
+        fmt = DATASETS[name]["format"]
+        row = {"dataset": name, "raw_mb": raw / 1e6}
+        for k in ("gzip", "bzip2", "lzma"):
+            t0 = time.time()
+            row[k] = raw / len(kernel_baseline(lines, k))
+            row[f"{k}_s"] = time.time() - t0
+        row["cowic_like"] = raw / len(cowic_like(lines))
+        row["logarchive_like"] = raw / len(logarchive_like(lines))
+        for k in ("gzip", "bzip2", "lzma"):
+            t0 = time.time()
+            blob = compress(lines, LogzipConfig(level=3, kernel=k, format=fmt, ise=ISE_FAST))
+            row[f"logzip_{k}"] = raw / len(blob)
+            row[f"logzip_{k}_s"] = time.time() - t0
+        row["improvement_gzip"] = row["logzip_gzip"] / row["gzip"]
+        rows.append(row)
+    return rows
+
+
+def fig6_levels(n_lines: int = 40000) -> list[dict]:
+    """Fig 6: compressed size by logzip level (gzip kernel) vs raw gzip."""
+    rows = []
+    for name in DATASETS:
+        lines, raw = _corpus(name, n_lines)
+        fmt = DATASETS[name]["format"]
+        row = {"dataset": name, "raw_mb": raw / 1e6,
+               "gzip_mb": len(kernel_baseline(lines, "gzip")) / 1e6}
+        for level in (1, 2, 3):
+            blob = compress(lines, LogzipConfig(level=level, kernel="gzip", format=fmt, ise=ISE_FAST))
+            row[f"L{level}_mb"] = len(blob) / 1e6
+        rows.append(row)
+    return rows
+
+
+def fig7_workers(n_lines: int = 40000, workers=(1, 2, 4, 8)) -> list[dict]:
+    """Fig 7: chunked multi-worker compression.
+
+    NOTE: this container exposes ONE cpu core, so wall-time cannot show
+    the paper's near-linear scaling; we report measured wall time, the
+    per-chunk CPU-time sum, and ideal_time = cpu_time / workers (what a
+    w-core host gets — the paper's result), plus the compressed-size
+    growth from chunking, which IS measurable here and matches Fig 7.
+    """
+    rows = []
+    for name in ("HDFS", "Spark"):
+        lines, raw = _corpus(name, n_lines)
+        cfg = LogzipConfig(level=3, kernel="gzip", format=DATASETS[name]["format"], ise=ISE_FAST)
+        whole = len(compress(lines, cfg))
+        for w in workers:
+            chunk = max(1, (len(lines) + w - 1) // w)
+            t0 = time.time()
+            blob = compress_parallel(lines, cfg, n_workers=1, chunk_lines=chunk)  # serial = cpu time
+            cpu_s = time.time() - t0
+            rows.append({
+                "dataset": name, "workers": w, "chunks": -(-len(lines) // chunk),
+                "cpu_time_s": cpu_s, "ideal_wall_s": cpu_s / w,
+                "size_mb": len(blob) / 1e6, "size_vs_whole": len(blob) / whole,
+            })
+    return rows
+
+
+def match_rate(n_lines: int = 60000) -> list[dict]:
+    """§V-D: ~1% sample yields >= 90% match in the first iterations."""
+    rows = []
+    for name in DATASETS:
+        lines, raw = _corpus(name, n_lines)
+        cfg = LogzipConfig(level=2, kernel="gzip", format=DATASETS[name]["format"],
+                           ise=ISEConfig(sample_rate=0.01, min_sample=200, max_iters=4))
+        blob = compress(lines, cfg)
+        s = read_structured(blob)
+        rows.append({"dataset": name, "match_rate": s["match_rate"],
+                     "n_templates": len(s["templates"])})
+    return rows

@@ -1,0 +1,60 @@
+"""Throughput of the logzip hot-spot kernels (interpret mode on CPU — the
+numbers calibrate RELATIVE costs; absolute TPU throughput needs hardware).
+
+Compares: python trie, numpy DP matcher, Pallas wildcard_match
+(interpret), and numpy vs Pallas simcount, on a realistic template mix.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.match import match_first
+from repro.core.tokenizer import Vocab, tokenize
+from repro.core.trie import PrefixTree
+from repro.data.loggen import generate_lines
+from repro.kernels import ops
+
+
+def _prep(n_lines=20000):
+    v = Vocab()
+    lines = generate_lines("Spark", n_lines, seed=3)
+    toks = [tokenize(l.split(": ", 1)[-1])[0] for l in lines]
+    ids, lens = v.encode_batch(toks, 48)
+    # build templates from a sample via ISE
+    from repro.core.ise import ISEConfig, iterative_structure_extraction
+
+    res = iterative_structure_extraction(ids[:4000], lens[:4000], vocab_size=len(v),
+                                         cfg=ISEConfig(min_sample=300))
+    return ids, lens, res.templates
+
+
+def run(n_lines=20000) -> list[dict]:
+    ids, lens, templates = _prep(n_lines)
+    rows = []
+
+    t0 = time.time()
+    tree = PrefixTree()
+    for i, t in enumerate(templates):
+        tree.insert(t, i)
+    a_trie, _ = tree.match_batch(ids, lens)
+    rows.append({"impl": "trie (python)", "lines_per_s": len(ids) / (time.time() - t0)})
+
+    t0 = time.time()
+    a_np = match_first(ids, lens, templates, use_kernel=False)
+    rows.append({"impl": "DP matcher (numpy)", "lines_per_s": len(ids) / (time.time() - t0)})
+
+    t0 = time.time()
+    a_k = match_first(ids, lens, templates, use_kernel=True)
+    rows.append({"impl": "wildcard_match (pallas interpret)", "lines_per_s": len(ids) / (time.time() - t0)})
+
+    assert ((a_np >= 0) == (a_trie >= 0)).all()
+    assert (a_np == a_k).all()
+
+    tm, tl = ops.pack_templates(templates)
+    t0 = time.time()
+    ops.simcount(ids[:8192], tm).block_until_ready()
+    rows.append({"impl": "simcount (pallas interpret)", "lines_per_s": 8192 / (time.time() - t0)})
+    return rows

@@ -1,0 +1,98 @@
+"""Roofline report over artifacts/dryrun/*.json (deliverable g).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, per-device
+memory, and a one-line "what would move the dominant term" note.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+Emits markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+V5E_NOTE = "TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI"
+
+MOVE_NOTES = {
+    "compute": "raise arithmetic efficiency: bigger microbatch / less remat recompute",
+    "memory": "cut boundary traffic: bf16 flash carries, larger ssm/attn chunks, fuse norms",
+    "collective": "cut wire bytes: bf16 psums, 2D-shard logits collectives, overlap FSDP gathers",
+}
+
+
+def load(dirname: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        if f.endswith("sweep_summary.json"):
+            continue
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:6.1f}ms"
+    return f"{x*1e6:6.1f}us"
+
+
+def report(rows: list[dict], mesh: str = "single") -> str:
+    out = [f"### Roofline — {mesh} pod ({'256' if mesh == 'single' else '512'} chips; {V5E_NOTE})", ""]
+    out.append("| arch | shape | t_compute | t_memory (tpu-adj) | t_collective | bound | useful-FLOPs | temp GB/dev | note |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    sel = [r for r in rows if r["mesh"] == mesh]
+    sel.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in sel:
+        t = r["roofline"]
+        note = MOVE_NOTES[t["dominant"]]
+        mem = fmt_s(t["t_memory_s"])
+        if "t_memory_tpu_s" in t:
+            mem += f" ({fmt_s(t['t_memory_tpu_s'])})"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} | {mem} "
+            f"| {fmt_s(t['t_collective_s'])} | **{t['dominant']}** | {r['useful_flops_ratio']:.3f} "
+            f"| {r['memory']['temp_bytes']/1e9:.1f} | {note} |"
+        )
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows: list[dict]) -> dict:
+    """worst roofline fraction / most collective-bound / paper-representative."""
+    single = [r for r in rows if r["mesh"] == "single"]
+
+    def frac(r):  # compute share of the bound = roofline fraction proxy
+        t = r["roofline"]
+        lb = max(t["step_time_lower_bound_s"], 1e-12)
+        return t["t_compute_s"] / lb
+
+    worst = min(single, key=frac)
+    coll = max(single, key=lambda r: r["roofline"]["t_collective_s"] /
+               max(r["roofline"]["step_time_lower_bound_s"], 1e-12))
+    return {"worst_fraction": worst, "most_collective": coll}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun"))
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print("no artifacts found — run scripts/sweep_dryrun.py first")
+        return
+    print(report(rows, "single"))
+    print()
+    print(report(rows, "multi"))
+    picks = pick_hillclimb(rows)
+    print("\n### Hillclimb picks")
+    for k, r in picks.items():
+        print(f"- {k}: {r['arch']} x {r['shape']} (dominant={r['roofline']['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

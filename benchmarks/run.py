@@ -1,0 +1,59 @@
+"""Benchmark driver — one section per paper table/figure + ours.
+
+PYTHONPATH=src python -m benchmarks.run [--lines N] [--quick]
+Emits CSV-ish sections; EXPERIMENTS.md embeds the output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def _emit(title: str, rows: list) -> None:
+    print(f"\n## {title}")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c]) for c in cols))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lines", type=int, default=40000)
+    ap.add_argument("--quick", action="store_true", help="tiny sizes (CI)")
+    args = ap.parse_args()
+    n = 4000 if args.quick else args.lines
+
+    from benchmarks import compression, kernel_bench
+
+    t0 = time.time()
+    _emit("Table II — compression ratio (synthetic corpora; orderings are the target)",
+          compression.table2(n))
+    _emit("Fig 6 — compressed MB by logzip level (gzip kernel)",
+          compression.fig6_levels(n))
+    _emit("Fig 7 — workers / chunking (1-core container: ideal_wall_s = cpu/w)",
+          compression.fig7_workers(n))
+    _emit("Sec V-D — ISE match rate from ~1% sample",
+          compression.match_rate(n if args.quick else max(n, 20000)))
+    _emit("Kernel throughput (CPU interpret — relative only)",
+          kernel_bench.run(4000 if args.quick else 20000))
+
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):
+        from benchmarks import roofline
+
+        rows = roofline.load(art)
+        print()
+        print(roofline.report(rows, "single"))
+        print()
+        print(roofline.report(rows, "multi"))
+    print(f"\ntotal bench time: {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Downstream task on the logzip IR (paper §I: "the structured
+intermediate representations ... can be directly utilized in many
+downstream tasks"): DeepLog-style anomaly detection on EventID streams.
+
+Template lifecycle follows the paper §III-E: ISE runs ONCE on a clean
+reference corpus; new logs are matched against the STORED templates (no
+re-clustering), so EventIDs are stable across streams. Detection = a
+tiny event-LM's top-k misses + the unmatched-line rate.
+
+    PYTHONPATH=src python examples/anomaly_detection.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ise import ISEConfig, iterative_structure_extraction
+from repro.core.match import match_first
+from repro.core.tokenizer import LogFormat, Vocab, tokenize
+from repro.data.loggen import DATASETS, generate_lines
+from repro.models import ModelConfig, forward, init_params
+from repro.optim.adamw import AdamWHyper, adamw_init
+from repro.train.steps import make_train_step
+
+FMT = LogFormat(DATASETS["HDFS"]["format"])
+
+
+def to_ids(lines, vocab, assign_new):
+    cols, ok, _ = FMT.parse(lines)
+    toks = [tokenize(c)[0] for c in cols["Content"]]
+    return vocab.encode_batch(toks, 32, assign=assign_new)
+
+
+def main():
+    vocab = Vocab()
+
+    # --- one-off ISE on a clean reference corpus (paper: "one-off procedure") ---
+    ref = list(generate_lines("HDFS", 20000, seed=0, anomaly_rate=0.0))
+    ids, lens = to_ids(ref, vocab, assign_new=True)
+    res = iterative_structure_extraction(ids, lens, vocab_size=len(vocab),
+                                         cfg=ISEConfig(min_sample=400, seed=1))
+    templates = res.templates
+    print(f"reference: {len(templates)} templates, match {100*res.match_rate:.1f}%")
+    n_events = len(templates) + 1  # +1 = "unmatched" event
+
+    def event_stream(lines):
+        ids, lens = to_ids(lines, vocab, assign_new=False)
+        assign = match_first(ids, lens, templates)
+        return np.where(assign >= 0, assign, len(templates)).astype(np.int32)
+
+    train_ev = event_stream(ref)
+
+    # --- tiny event-LM on the reference stream ---
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                      vocab_size=max(n_events, 8), remat=False, attn_chunk_k=32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, AdamWHyper(lr=3e-3)))
+    opt = adamw_init(params)
+    seq = 64
+    for i in range(60):
+        start = (i * 8 * seq) % (len(train_ev) - 8 * seq - 1)
+        w = train_ev[start : start + 8 * seq + 1]
+        params, opt, m = step(params, opt, {"tokens": jnp.asarray(w[:-1].reshape(8, seq)),
+                                            "labels": jnp.asarray(w[1:].reshape(8, seq))})
+    print(f"event-LM trained, final loss {float(m['loss']):.3f}")
+
+    @jax.jit
+    def topk_hit(toks, labs, k=3):
+        logits, _ = forward(params, cfg, {"tokens": toks})
+        top = jnp.argsort(-logits, axis=-1)[..., :k]
+        return (top == labs[..., None]).any(-1)
+
+    def anomaly_score(lines):
+        ev = event_stream(lines)
+        unmatched = float((ev == len(templates)).mean())
+        n = (len(ev) - 1) // seq * seq
+        hit = topk_hit(jnp.asarray(ev[:n].reshape(-1, seq)),
+                       jnp.asarray(ev[1 : n + 1].reshape(-1, seq)))
+        return (1.0 - float(hit.mean())) + unmatched
+
+    clean = anomaly_score(list(generate_lines("HDFS", 8000, seed=7, anomaly_rate=0.0)))
+    dirty = anomaly_score(list(generate_lines("HDFS", 8000, seed=7, anomaly_rate=0.12)))
+    print(f"anomaly score clean={clean:.4f}  injected={dirty:.4f}  "
+          f"(ratio {dirty/max(clean,1e-6):.1f}x)")
+    assert dirty > clean * 1.5, "injected anomalies must raise the score"
+    print("anomaly bursts detected on the logzip IR (stable EventIDs, no re-parsing)")
+
+
+if __name__ == "__main__":
+    main()

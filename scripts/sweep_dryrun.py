@@ -1,0 +1,69 @@
+"""Sequential dry-run sweep: one fresh subprocess per (arch, shape, mesh)
+cell (isolates jax/XLA state + memory), smallest archs first, logging to
+artifacts/dryrun/sweep.log. Skips cells whose artifact already exists
+unless --force."""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "artifacts", "dryrun")
+
+ORDER = [
+    "whisper-base", "qwen1.5-0.5b", "qwen3-1.7b", "internvl2-2b",
+    "qwen1.5-4b", "rwkv6-7b", "qwen2-7b", "jamba-v0.1-52b",
+    "dbrx-132b", "grok-1-314b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+LONG_OK = {"jamba-v0.1-52b", "rwkv6-7b"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(OUT, exist_ok=True)
+    results = []
+    for arch in ORDER:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            for mesh in meshes:
+                name = f"{arch}__{shape}__{mesh}"
+                art = os.path.join(OUT, name + ".json")
+                if os.path.exists(art) and not args.force:
+                    print(f"skip {name} (exists)", flush=True)
+                    continue
+                t0 = time.time()
+                env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+                p = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun",
+                     "--arch", arch, "--shape", shape, "--mesh", mesh, "--out", OUT],
+                    env=env, cwd=ROOT, capture_output=True, text=True,
+                    timeout=args.timeout,
+                )
+                dt = time.time() - t0
+                ok = p.returncode == 0 and os.path.exists(art)
+                results.append({"cell": name, "ok": ok, "wall_s": round(dt, 1)})
+                print(f"{'OK  ' if ok else 'FAIL'} {name} ({dt:.0f}s)", flush=True)
+                if not ok:
+                    tail = (p.stdout + p.stderr)[-2000:]
+                    with open(os.path.join(OUT, name + ".err"), "w") as f:
+                        f.write(tail)
+                    print(tail[-600:], flush=True)
+    with open(os.path.join(OUT, "sweep_summary.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    n_fail = sum(1 for r in results if not r["ok"])
+    print(f"\nsweep done: {len(results)} ran, {n_fail} failed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

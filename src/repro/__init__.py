@@ -1,0 +1,16 @@
+"""logzip-jax: Logzip (ISSRE'19) log compression + a multi-pod JAX LM platform.
+
+Layout:
+    repro.core        -- the paper: ISE structure extraction + 3-level codec
+    repro.kernels     -- Pallas TPU kernels (simcount, greedy wildcard match)
+    repro.models      -- LM model zoo (dense/GQA/MoE/Mamba/RWKV6/enc-dec/VLM)
+    repro.data        -- synthetic loghub corpora + logzip-shard data pipeline
+    repro.train       -- train/serve steps
+    repro.optim       -- sharded AdamW, schedules, grad compression
+    repro.checkpoint  -- async atomic checkpoints with elastic resharding
+    repro.distributed -- sharding rules
+    repro.configs     -- assigned architecture configs
+    repro.launch      -- mesh / dryrun / train / serve / compress CLIs
+"""
+
+__version__ = "0.1.0"

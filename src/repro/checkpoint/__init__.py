@@ -1,0 +1,3 @@
+"""Atomic, async, elastically-reshardable checkpoints."""
+
+from .ckpt import CheckpointManager, load_checkpoint, save_checkpoint

@@ -1,0 +1,268 @@
+"""Object encoders for the logzip 3-level representation (paper §IV-B).
+
+Everything here is lossless by construction:
+
+- ``varint`` streams for id columns (EventIDs, pattern ids, ParaIDs).
+  (The paper renders ParaIDs as base-64 *text*; we use LEB128 binary —
+  same idea, strictly denser before the kernel. Recorded in DESIGN.md.)
+- ``esc``/``unesc`` make arbitrary strings newline-safe so columns can be
+  newline-joined.
+- ``ColumnCodec``: the paper's sub-field splitting. Each value is split on
+  runs of non-alphanumeric characters; the delimiter skeleton becomes a
+  *pattern* (interned in a dictionary, one varint id per line) and the
+  alphanumeric runs become per-slot columns. With ``dictionary=True``
+  (Level 3) slot values are additionally interned in a shared
+  ``ParamDict`` and stored as varint ParaIDs.
+"""
+
+from __future__ import annotations
+
+import re
+
+# ---------------------------------------------------------------- varint
+
+def write_varint(out: bytearray, v: int) -> None:
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return
+
+
+def encode_varints(values) -> bytes:
+    out = bytearray()
+    for v in values:
+        write_varint(out, int(v))
+    return bytes(out)
+
+
+def decode_varints(data: bytes) -> list[int]:
+    out: list[int] = []
+    cur = 0
+    shift = 0
+    for b in data:
+        cur |= (b & 0x7F) << shift
+        if b & 0x80:
+            shift += 7
+        else:
+            out.append(cur)
+            cur = 0
+            shift = 0
+    return out
+
+
+# ---------------------------------------------------------------- escaping
+
+def esc(s: str) -> str:
+    return (
+        s.replace("\\", "\\\\")
+        .replace("\n", "\\n")
+        .replace("\r", "\\r")
+        .replace("\x00", "\\0")
+        .replace("\x02", "\\2")
+    )
+
+
+def unesc(s: str) -> str:
+    out = []
+    i = 0
+    n = len(s)
+    while i < n:
+        c = s[i]
+        if c == "\\" and i + 1 < n:
+            nxt = s[i + 1]
+            out.append({"\\": "\\", "n": "\n", "r": "\r", "0": "\x00", "2": "\x02"}.get(nxt, "\\" + nxt))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def join_column(values: list[str]) -> bytes:
+    """varint count prefix + newline-joined escaped values (unambiguous
+    for [] vs [""])."""
+    head = bytearray()
+    write_varint(head, len(values))
+    return bytes(head) + "\n".join(esc(v) for v in values).encode("utf-8")
+
+
+def split_column(data: bytes) -> list[str]:
+    n = 0
+    shift = 0
+    pos = 0
+    while True:
+        b = data[pos]
+        pos += 1
+        n |= (b & 0x7F) << shift
+        if not (b & 0x80):
+            break
+        shift += 7
+    if n == 0:
+        return []
+    vals = data[pos:].decode("utf-8").split("\n")
+    assert len(vals) == n, (len(vals), n)
+    return [unesc(v) for v in vals]
+
+
+# ---------------------------------------------------------------- ParamDict
+
+class ParamDict:
+    """Global value->ParaID dictionary shared by all groups (paper L3)."""
+
+    def __init__(self):
+        self._to_id: dict[str, int] = {}
+        self.values: list[str] = []
+
+    def id(self, value: str) -> int:
+        i = self._to_id.get(value)
+        if i is None:
+            i = len(self.values)
+            self._to_id[value] = i
+            self.values.append(value)
+        return i
+
+    def encode(self) -> bytes:
+        return join_column(self.values)
+
+    @staticmethod
+    def decode(data: bytes) -> list[str]:
+        return split_column(data)
+
+
+# ---------------------------------------------------------------- columns
+
+_SLOT_RE = re.compile(r"[0-9A-Za-z]+")
+
+
+def split_subfields(value: str) -> tuple[str, list[str]]:
+    """Split on non-alphanumeric runs. -> (pattern with \\x00 slots, parts)."""
+    parts = _SLOT_RE.findall(value)
+    pattern = _SLOT_RE.sub("\x00", value)
+    return pattern, parts
+
+
+def merge_subfields(pattern: str, parts: list[str]) -> str:
+    segs = pattern.split("\x00")
+    out = [segs[0]]
+    for seg, part in zip(segs[1:], parts):
+        out.append(part)
+        out.append(seg)
+    return "".join(out)
+
+
+class ColumnCodec:
+    """Sub-field columnarization of one string column (paper L1/L2/L3).
+
+    encode(values) -> {name.pat: pattern dict, name.pid: varint pattern ids,
+                       name.s<k>: slot-k column (text or varint ParaIDs)}
+    Slot columns are grouped *per pattern* so that values sharing a
+    skeleton land in the same object (the paper's coherence argument).
+    """
+
+    def __init__(self, name: str, paradict: ParamDict | None = None):
+        self.name = name
+        self.paradict = paradict
+
+    def encode(self, values: list[str]) -> dict[str, bytes]:
+        patterns: dict[str, int] = {}
+        pat_list: list[str] = []
+        pat_ids: list[int] = []
+        slots: dict[tuple[int, int], list] = {}  # (pattern id, slot) -> parts
+        for v in values:
+            # escape first so the \x00 slot marker can never collide with
+            # value bytes; decode merges then un-escapes.
+            pattern, parts = split_subfields(esc(v))
+            pid = patterns.get(pattern)
+            if pid is None:
+                pid = len(pat_list)
+                patterns[pattern] = pid
+                pat_list.append(pattern)
+            pat_ids.append(pid)
+            for k, part in enumerate(parts):
+                slots.setdefault((pid, k), []).append(part)
+        objs: dict[str, bytes] = {
+            f"{self.name}.pat": join_column(pat_list),
+            f"{self.name}.pid": encode_varints(pat_ids),
+        }
+        for (pid, k), parts in sorted(slots.items()):
+            key = f"{self.name}.p{pid}s{k}"
+            if self.paradict is not None:
+                objs[key] = encode_varints(self.paradict.id(p) for p in parts)
+            else:
+                objs[key] = join_column(parts)
+        return objs
+
+    def decode(self, objs: dict[str, bytes], n: int, paravalues: list[str] | None = None) -> list[str]:
+        pat_list = split_column(objs[f"{self.name}.pat"])
+        pat_ids = decode_varints(objs[f"{self.name}.pid"])
+        assert len(pat_ids) == n, (self.name, len(pat_ids), n)
+        cursors: dict[tuple[int, int], int] = {}
+        slot_cols: dict[tuple[int, int], list[str]] = {}
+        out: list[str] = []
+        for pid in pat_ids:
+            pattern = pat_list[pid]
+            n_slots = pattern.count("\x00")
+            parts = []
+            for k in range(n_slots):
+                col = slot_cols.get((pid, k))
+                if col is None:
+                    raw = objs[f"{self.name}.p{pid}s{k}"]
+                    if paravalues is not None:
+                        col = [paravalues[i] for i in decode_varints(raw)]
+                    else:
+                        col = split_column(raw)
+                    slot_cols[(pid, k)] = col
+                c = cursors.get((pid, k), 0)
+                parts.append(col[c])
+                cursors[(pid, k)] = c + 1
+            out.append(unesc(merge_subfields(pattern, parts)))
+        return out
+
+
+# ------------------------------------------------------------- container
+
+MAGIC = b"LZJ1"
+
+
+def pack_container(objects: dict[str, bytes]) -> bytes:
+    out = bytearray(MAGIC)
+    write_varint(out, len(objects))
+    for name, data in objects.items():
+        nb = name.encode("utf-8")
+        write_varint(out, len(nb))
+        out += nb
+        write_varint(out, len(data))
+        out += data
+    return bytes(out)
+
+
+def unpack_container(data: bytes) -> dict[str, bytes]:
+    assert data[:4] == MAGIC, "bad container magic"
+    pos = 4
+
+    def rd_varint() -> int:
+        nonlocal pos
+        cur = 0
+        shift = 0
+        while True:
+            b = data[pos]
+            pos += 1
+            cur |= (b & 0x7F) << shift
+            if not (b & 0x80):
+                return cur
+            shift += 7
+
+    n = rd_varint()
+    objects: dict[str, bytes] = {}
+    for _ in range(n):
+        ln = rd_varint()
+        name = data[pos : pos + ln].decode("utf-8")
+        pos += ln
+        dl = rd_varint()
+        objects[name] = data[pos : pos + dl]
+        pos += dl
+    return objects

@@ -1,0 +1,145 @@
+"""Batched wildcard-template matching (paper §III-D), TPU-adapted.
+
+The paper walks a prefix tree per log line. On a TPU we want a dense,
+branch-free formulation: for one template ``t_1..t_m`` and a line
+``x_1..x_n`` define the reachability DP
+
+    M[i, 0] = (i == 0)
+    M[i, j] = M[i-1, j-1] and (x_i == t_j)            if t_j literal
+    M[i, j] = OR_{i' < i} M[i', j-1]                  if t_j == '*'
+              (= shift1(cummax(M[:, j-1])))           ('*' absorbs >= 1)
+
+and the line matches iff ``M[n, m]``. Each template column is one
+vectorized update over a whole *block of lines*, so the work is
+(lines x template positions) vector ops — this is exactly what
+``repro.kernels.wildcard_match`` tiles onto VMEM. The numpy path here is
+the host fallback and the oracle for the Pallas kernel.
+
+Parameter spans are recovered by a vectorized backtrack (later stars take
+the shortest span; any valid alignment is lossless — the tie-break only
+fixes determinism).
+
+``match_first`` assigns each line the lowest-id matching template —
+the production-canonical assignment. First-token bucketing (the trie's
+root-level pruning) cuts the candidate template set per line.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .tokenizer import PAD_ID, STAR_ID
+
+CHUNK = 4096  # lines per DP chunk (bounds the M tensor to ~70 MB)
+
+
+def _dp_columns(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
+    """All DP columns for one template over a chunk of lines.
+
+    ids: (N, T) int32, lens: (N,), template: (m,) id seq (no PAD).
+    Returns M: (N, T+1, m+1) bool.
+    """
+    n, t = ids.shape
+    m = len(template)
+    M = np.zeros((n, t + 1, m + 1), dtype=bool)
+    M[:, 0, 0] = True
+    pos = np.arange(1, t + 1)
+    valid = pos[None, :] <= lens[:, None]  # (N, T) position i exists
+    for j in range(1, m + 1):
+        tj = int(template[j - 1])
+        prev = M[:, :, j - 1]
+        if tj == STAR_ID:
+            # OR over strict prefix: shift-by-1 of running-OR
+            run = np.logical_or.accumulate(prev, axis=1)
+            M[:, 1:, j] = run[:, :-1]
+        else:
+            M[:, 1:, j] = prev[:, :-1] & (ids == tj)
+        M[:, 1:, j] &= valid
+    return M
+
+
+def match_one_template(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
+    """(N,) bool: does each line match this template."""
+    out = np.zeros((ids.shape[0],), bool)
+    t = ids.shape[1]
+    lens_c = np.minimum(lens, t)
+    for s in range(0, ids.shape[0], CHUNK):
+        sl = slice(s, min(s + CHUNK, ids.shape[0]))
+        M = _dp_columns(ids[sl], lens_c[sl], template)
+        out[sl] = M[np.arange(sl.stop - sl.start), lens_c[sl], len(template)]
+    # over-length lines never match (their tail was truncated)
+    out &= lens <= t
+    return out
+
+
+def match_first(
+    ids: np.ndarray,
+    lens: np.ndarray,
+    templates: list[np.ndarray],
+    use_kernel: bool = False,
+) -> np.ndarray:
+    """Assign each line the lowest-id matching template (-1 = none).
+
+    Templates are bucketed by first token (literal or '*') like the trie
+    root, so each line only runs the DP against plausible candidates.
+    """
+    n = ids.shape[0]
+    assign = np.full((n,), -1, np.int32)
+    if not templates or n == 0:
+        return assign
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        matches = kops.wildcard_match_host(ids, lens, templates)  # (N, K) bool
+        any_m = matches.any(axis=1)
+        assign[any_m] = np.argmax(matches[any_m], axis=1)
+        return assign
+
+    first_tok = ids[:, 0]
+    for k, tpl in enumerate(templates):
+        if len(tpl) == 0:
+            continue
+        todo = assign < 0
+        if int(tpl[0]) != STAR_ID:
+            todo &= first_tok == int(tpl[0])
+        if not todo.any():
+            continue
+        idx = np.nonzero(todo)[0]
+        ok = match_one_template(ids[idx], lens[idx], tpl)
+        assign[idx[ok]] = k
+    return assign
+
+
+def extract_spans(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
+    """Parameter spans for lines *known to match* ``template``.
+
+    Returns spans (N, n_stars, 2) int32 — token ranges [s, e) absorbed by
+    each '*' in template order. Vectorized backtrack over DP columns.
+    """
+    n, t = ids.shape
+    m = len(template)
+    stars = [j for j in range(m) if int(template[j]) == STAR_ID]
+    spans = np.zeros((n, len(stars), 2), dtype=np.int32)
+    if n == 0 or not stars:
+        return spans
+    for s0 in range(0, n, CHUNK):
+        sl = slice(s0, min(s0 + CHUNK, n))
+        M = _dp_columns(ids[sl], lens[sl], template)
+        nn = sl.stop - sl.start
+        i = lens[sl].astype(np.int64).copy()  # current log position per line
+        rows = np.arange(nn)
+        star_i = len(stars) - 1
+        pos = np.arange(t + 1)
+        for j in range(m, 0, -1):
+            if int(template[j - 1]) != STAR_ID:
+                i -= 1
+                continue
+            # largest i' <= i-1 with M[i', j-1] true
+            mask = M[:, :, j - 1] & (pos[None, :] <= (i - 1)[:, None])
+            ip = t - np.argmax(mask[:, ::-1], axis=1)
+            spans[sl, star_i, 0] = ip
+            spans[sl, star_i, 1] = i
+            i = ip
+            star_i -= 1
+    return spans

@@ -1,0 +1,88 @@
+"""Chunked, multi-worker logzip (paper §V-D, Fig 7).
+
+The file is split into chunks; each worker compresses its chunk
+independently (sampling+clustering+matching are per-chunk, so the whole
+pipeline is embarrassingly parallel — the paper's design). Chunking
+slightly hurts CR (no cross-chunk template sharing), exactly as the paper
+reports; the benchmark reproduces that curve.
+
+On a TPU pod the analogous parallelism is ``shard_map`` over the ``data``
+axis (see ``repro.kernels.ops.wildcard_match_sharded``) — matching is the
+bulk of the work and needs no cross-shard communication.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import io
+from dataclasses import replace
+
+from .codec import FILE_MAGIC, LogzipConfig, compress, decompress
+from .encode import pack_container, unpack_container, write_varint
+
+MULTI_MAGIC = b"LZJM"
+
+
+def _compress_chunk(args) -> bytes:
+    lines, cfg = args
+    return compress(lines, cfg)
+
+
+def compress_parallel(
+    lines: list[str],
+    cfg: LogzipConfig | None = None,
+    n_workers: int = 1,
+    chunk_lines: int | None = None,
+) -> bytes:
+    """Compress with ``n_workers`` processes over line chunks."""
+    cfg = cfg or LogzipConfig()
+    if chunk_lines is None:
+        chunk_lines = max(1, (len(lines) + n_workers - 1) // max(n_workers, 1))
+    chunks = [lines[i : i + chunk_lines] for i in range(0, len(lines), chunk_lines)] or [[]]
+
+    if n_workers <= 1 or len(chunks) == 1:
+        blobs = [compress(c, cfg) for c in chunks]
+    else:
+        with cf.ProcessPoolExecutor(max_workers=n_workers) as ex:
+            blobs = list(ex.map(_compress_chunk, [(c, cfg) for c in chunks]))
+
+    out = bytearray(MULTI_MAGIC)
+    write_varint(out, len(blobs))
+    for b in blobs:
+        write_varint(out, len(b))
+        out += b
+    return bytes(out)
+
+
+def decompress_parallel(blob: bytes, n_workers: int = 1) -> list[str]:
+    if blob[:4] == FILE_MAGIC:  # plain single archive
+        return decompress(blob)
+    assert blob[:4] == MULTI_MAGIC, "not a logzip archive"
+    pos = 4
+
+    def rd() -> int:
+        nonlocal pos
+        cur, shift = 0, 0
+        while True:
+            b = blob[pos]
+            pos += 1
+            cur |= (b & 0x7F) << shift
+            if not (b & 0x80):
+                return cur
+            shift += 7
+
+    n = rd()
+    parts = []
+    for _ in range(n):
+        ln = rd()
+        parts.append(blob[pos : pos + ln])
+        pos += ln
+    if n_workers <= 1 or n == 1:
+        decoded = [decompress(p) for p in parts]
+    else:
+        with cf.ProcessPoolExecutor(max_workers=n_workers) as ex:
+            decoded = list(ex.map(decompress, parts))
+    out: list[str] = []
+    for d in decoded:
+        out.extend(d)
+    return out

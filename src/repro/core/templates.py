@@ -1,0 +1,88 @@
+"""Portable template stores (paper §III-E).
+
+"In practice, logging statements of a system evolve slowly. Therefore,
+ISE could be considered as a one-off procedure for a specific system...
+we could extract structures of new logs from the system through matching
+instead of running the ISE."
+
+A ``TemplateStore`` holds templates as token STRINGS (None = wildcard),
+so it is independent of any one archive's vocab. ``extract_templates``
+runs ISE once; ``codec.compress(..., template_store=...)`` (via
+``LogzipConfig.template_store``) then matches new corpora against the
+stored set — EventIDs are stable across archives/streams, which is what
+downstream consumers (anomaly detection, dashboards) key on.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .ise import ISEConfig, ISEResult, iterative_structure_extraction
+from .tokenizer import STAR_ID, LogFormat, Vocab, tokenize
+
+
+class TemplateStore:
+    def __init__(self, templates: list[tuple]):
+        # each template: tuple of token strings, None = wildcard
+        self.templates = [tuple(t) for t in templates]
+
+    def __len__(self):
+        return len(self.templates)
+
+    @classmethod
+    def from_ise(cls, result: ISEResult, vocab: Vocab) -> "TemplateStore":
+        out = []
+        for tpl in result.templates:
+            out.append(tuple(None if int(t) == STAR_ID else vocab.token(int(t)) for t in tpl))
+        return cls(out)
+
+    def to_id_arrays(self, vocab: Vocab) -> list[np.ndarray]:
+        """Map to a given archive's vocab. Literals absent from the corpus
+        keep PAD id 0 -> the template simply cannot match there (correct:
+        that literal does not occur)."""
+        out = []
+        for tpl in self.templates:
+            out.append(np.array(
+                [STAR_ID if t is None else vocab.lookup(t) for t in tpl], np.int32
+            ))
+        return out
+
+    def as_strings(self) -> list[str]:
+        return [" ".join("<*>" if t is None else t for t in tpl) for tpl in self.templates]
+
+    def save(self, path: str) -> None:
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump([[t for t in tpl] for tpl in self.templates], f)
+
+    @classmethod
+    def load(cls, path: str) -> "TemplateStore":
+        with open(path, encoding="utf-8") as f:
+            return cls([tuple(t) for t in json.load(f)])
+
+
+def extract_templates(lines: list[str], format: str | None = None,
+                      ise: ISEConfig | None = None) -> TemplateStore:
+    """One-off ISE over a reference corpus -> reusable TemplateStore."""
+    if format:
+        fmt = LogFormat(format)
+        cols, ok, _ = fmt.parse(lines)
+        contents = cols[fmt.content_field]
+        levels = cols.get("Level")
+        comps = cols.get("Component")
+    else:
+        contents, levels, comps = list(lines), None, None
+    vocab = Vocab()
+    toks = [tokenize(c)[0] for c in contents]
+    ids, lens = vocab.encode_batch(toks, 128)
+
+    def fact(vals):
+        if vals is None:
+            return None
+        seen: dict = {}
+        return np.array([seen.setdefault(v, len(seen)) for v in vals], np.int64)
+
+    res = iterative_structure_extraction(ids, lens, fact(levels), fact(comps),
+                                         len(vocab), ise or ISEConfig())
+    return TemplateStore.from_ise(res, vocab)

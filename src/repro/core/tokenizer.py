@@ -1,0 +1,195 @@
+"""Log line parsing + content tokenization for logzip (paper §II, §IV-B L1).
+
+A ``LogFormat`` turns a loghub-style format string, e.g.::
+
+    "<Date> <Time> <Level> <Component>: <Content>"
+
+into a compiled regex with named groups (same convention as logparser /
+the original logzip). ``parse`` splits every raw line into header-field
+columns plus the free-text message content; lines that do not match the
+format are routed to a verbatim side-channel so compression stays lossless.
+
+``tokenize`` splits message content into (tokens, delimiters) where the
+delimiter strings are preserved exactly: ``reassemble(tokens, delims)``
+is byte-identical to the input. Matching/clustering operate on tokens
+only; delimiters ride along in a pattern-dictionary column.
+
+``Vocab`` maps token strings to int32 ids for the accelerator path.
+id 0 is PAD, id 1 is the wildcard ``*`` (never produced by tokenize:
+literal "*" tokens are escaped on entry).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PAD_ID = 0
+STAR_ID = 1
+_N_RESERVED = 2
+
+# Token delimiters used by the paper's implementation: whitespace plus a
+# small set of punctuation. A "token" is a maximal run of non-delimiter
+# characters; delimiter runs are preserved verbatim.
+DEFAULT_DELIMITERS = " \t,;:="
+_TOKEN_RE_CACHE: dict[str, re.Pattern] = {}
+
+
+def _token_re(delimiters: str) -> re.Pattern:
+    pat = _TOKEN_RE_CACHE.get(delimiters)
+    if pat is None:
+        cls = re.escape(delimiters)
+        pat = re.compile(rf"[^{cls}]+|[{cls}]+")
+        _TOKEN_RE_CACHE[delimiters] = pat
+    return pat
+
+
+def tokenize(content: str, delimiters: str = DEFAULT_DELIMITERS) -> tuple[list[str], list[str]]:
+    """Split ``content`` into (tokens, delims).
+
+    ``len(delims) == len(tokens) + 1``; delims[0] / delims[-1] are the
+    (possibly empty) leading / trailing delimiter runs.
+    """
+    tokens: list[str] = []
+    delims: list[str] = [""]
+    if not content:
+        return tokens, delims
+    dset = set(delimiters)
+    # findall yields maximal alternating runs of token / delimiter chars.
+    for piece in _token_re(delimiters).findall(content):
+        if piece[0] in dset:
+            delims[-1] += piece
+        else:
+            tokens.append(piece)
+            delims.append("")
+    return tokens, delims
+
+
+def reassemble(tokens: list[str], delims: list[str]) -> str:
+    out = [delims[0]]
+    for t, d in zip(tokens, delims[1:]):
+        out.append(t)
+        out.append(d)
+    return "".join(out)
+
+
+@dataclass
+class LogFormat:
+    """loghub-style header format, e.g. ``<Date> <Time> <Level> <Component>: <Content>``."""
+
+    format: str
+    content_field: str = "Content"
+    fields: list[str] = field(init=False)
+    regex: re.Pattern = field(init=False)
+
+    def __post_init__(self):
+        self.fields = re.findall(r"<(\w+)>", self.format)
+        if self.content_field not in self.fields:
+            raise ValueError(f"format must contain <{self.content_field}>")
+        pattern = ""
+        pos = 0
+        for m in re.finditer(r"<(\w+)>", self.format):
+            lit = self.format[pos:m.start()]
+            # whitespace in the format matches any whitespace run (captured
+            # for losslessness via a separate group)
+            pattern += re.escape(lit).replace(r"\ ", r"\s+")
+            name = m.group(1)
+            if name == self.content_field:
+                pattern += rf"(?P<{name}>.*?)"
+            else:
+                pattern += rf"(?P<{name}>\S*?)"
+            pos = m.end()
+        pattern += re.escape(self.format[pos:]) + r"$"
+        self.regex = re.compile("^" + pattern)
+
+    def parse(self, lines: list[str]) -> tuple[dict[str, list[str]], list[int], list[int]]:
+        """Parse lines -> (field columns, matched line idx, unmatched line idx).
+
+        To keep the header losslessly reconstructible even with irregular
+        whitespace, a matched line must round-trip through ``render``;
+        otherwise it is treated as unmatched (stored verbatim).
+        """
+        columns: dict[str, list[str]] = {f: [] for f in self.fields}
+        ok_idx: list[int] = []
+        bad_idx: list[int] = []
+        for i, line in enumerate(lines):
+            m = self.regex.match(line)
+            if m is None:
+                bad_idx.append(i)
+                continue
+            vals = m.groupdict()
+            if self.render(vals) != line:
+                bad_idx.append(i)
+                continue
+            for f in self.fields:
+                columns[f].append(vals[f])
+            ok_idx.append(i)
+        return columns, ok_idx, bad_idx
+
+    def render(self, values: dict[str, str]) -> str:
+        out = self.format
+        for f in self.fields:
+            out = out.replace(f"<{f}>", values[f], 1)
+        return out
+
+
+# Formats for the five paper datasets (loghub conventions).
+LOG_FORMATS: dict[str, LogFormat] = {
+    "HDFS": LogFormat("<Date> <Time> <Pid> <Level> <Component>: <Content>"),
+    "Spark": LogFormat("<Date> <Time> <Level> <Component>: <Content>"),
+    "Android": LogFormat("<Date> <Time> <Pid> <Tid> <Level> <Component>: <Content>"),
+    "Windows": LogFormat("<Date> <Time>, <Level> <Component> <Content>"),
+    "Thunderbird": LogFormat("<Label> <Timestamp> <Date> <User> <Month> <Day> <Time> <Location> <Component>: <Content>"),
+}
+
+
+class Vocab:
+    """Token-string <-> int32 id mapping. 0=PAD, 1=STAR ('*')."""
+
+    def __init__(self):
+        self._to_id: dict[str, int] = {}
+        self._to_str: list[str] = ["\x00PAD", "*"]
+
+    def __len__(self) -> int:
+        return len(self._to_str)
+
+    def id(self, token: str) -> int:
+        """Get-or-assign id for a token. Literal '*' is escaped."""
+        if token == "*":
+            token = "\x01*"
+        i = self._to_id.get(token)
+        if i is None:
+            i = len(self._to_str)
+            self._to_id[token] = i
+            self._to_str.append(token)
+        return i
+
+    def lookup(self, token: str) -> int:
+        """Id for a token or PAD_ID if unseen (never assigns)."""
+        if token == "*":
+            token = "\x01*"
+        return self._to_id.get(token, PAD_ID)
+
+    def token(self, i: int) -> str:
+        t = self._to_str[i]
+        return "*" if t == "\x01*" else t
+
+    def encode_batch(
+        self, token_lists: list[list[str]], max_len: int, *, assign: bool = True
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """-> (ids (N, max_len) int32 PAD-padded, lengths (N,) int32).
+
+        Lines longer than ``max_len`` get length = actual length (callers
+        treat len > max_len as unmatched / verbatim).
+        """
+        n = len(token_lists)
+        ids = np.zeros((n, max_len), dtype=np.int32)
+        lens = np.zeros((n,), dtype=np.int32)
+        get = self.id if assign else self.lookup
+        for r, toks in enumerate(token_lists):
+            lens[r] = len(toks)
+            for c, t in enumerate(toks[:max_len]):
+                ids[r, c] = get(t)
+        return ids, lens

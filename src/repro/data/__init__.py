@@ -1,0 +1,3 @@
+"""Data plane: synthetic loghub-style corpora + logzip-shard pipeline."""
+
+from .loggen import DATASETS, generate_lines, write_dataset

@@ -1,0 +1,3 @@
+"""Sharding rules: logical param/batch/cache axes -> PartitionSpecs."""
+
+from .sharding import batch_pspecs, cache_pspecs, param_pspecs, to_shardings

@@ -1,0 +1,68 @@
+"""Activation sharding constraints.
+
+GSPMD propagates input shardings well through straight-line code but can
+lose them inside remat'd scan bodies (observed on this container: the
+batch dim silently replicated inside the backward regions, inflating
+per-device FLOPs 16x). The standard fix — used by MaxText et al. — is to
+pin activations with ``with_sharding_constraint`` at block boundaries.
+
+Model code stays mesh-agnostic: it calls ``shard_act(x, dims)`` which is
+a no-op unless the launcher installed a mesh via ``use_mesh``. ``dims``
+names the logical role of each axis: "batch" -> (pod, data), "model" ->
+model, None -> unsharded; any dim that doesn't divide falls back to None
+(long_500k has batch 1).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_STATE: dict = {"mesh": None, "dp": (), "tp": True}
+
+
+def install_mesh(mesh, dp_axes: tuple | None = None, tp: bool = True) -> None:
+    """``dp_axes``/``tp`` support the pure-DP layout for small models
+    (batch over every axis, no tensor parallelism — §Perf iteration R1)."""
+    _STATE["mesh"] = mesh
+    if mesh is None:
+        _STATE["dp"] = ()
+    elif dp_axes is not None:
+        _STATE["dp"] = dp_axes
+    else:
+        _STATE["dp"] = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _STATE["tp"] = tp
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = dict(_STATE)
+    install_mesh(mesh)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def shard_act(x, dims: tuple):
+    """Constrain ``x``: dims entries are "batch" | "model" | None."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    import jax
+
+    spec = []
+    for size, d in zip(x.shape, dims):
+        if d == "batch":
+            dp = _STATE["dp"]
+            n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+            spec.append(dp if (dp and size % n == 0) else None)
+        elif d == "model":
+            ok = _STATE["tp"] and size % mesh.shape["model"] == 0
+            spec.append("model" if ok else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

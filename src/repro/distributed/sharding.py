@@ -1,0 +1,265 @@
+"""Parallelism mapping (DESIGN.md §8).
+
+- TP over "model": attention q/o heads, FFN hidden dim, MoE experts
+  (when E % tp == 0, otherwise expert-internal TP), vocab for the
+  (un)embedding, RWKV heads, Mamba d_inner.
+- FSDP over "data": the other big param dim (ZeRO-3-style; XLA inserts
+  the all-gathers per scanned block).
+- DP over ("pod", "data"): the batch. Params are NOT sharded over "pod"
+  (FSDP stays intra-pod; the pod axis only carries gradient/psum traffic
+  across the DCN).
+- SP for decode: KV caches shard their *sequence* dim over "model"
+  (split-K decode attention), and batch over data when divisible.
+
+Rules are keyed on param-tree paths; every leaf must match exactly one
+rule (unmatched -> replicated with a warning, tests assert none).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+@dataclass
+class ShardingRules:
+    """Resolved per-(config, mesh) decisions."""
+
+    tp: int
+    fsdp: int
+    dp_axes: tuple
+    shard_q_heads: bool
+    shard_kv_heads: bool
+    shard_experts: bool
+
+    @classmethod
+    def make(cls, cfg, mesh):
+        tp = _axis_size(mesh, "model")
+        fsdp = _axis_size(mesh, "data")
+        return cls(
+            tp=tp,
+            fsdp=fsdp,
+            dp_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+            shard_q_heads=_div(cfg.n_heads, tp),
+            shard_kv_heads=_div(cfg.n_kv_heads, tp),
+            shard_experts=cfg.n_experts > 0 and _div(cfg.n_experts, tp),
+        )
+
+
+def _rule(keys: list, shape, cfg, r: ShardingRules):
+    """PartitionSpec for one param leaf (``shape`` excludes the scan-stack
+    dim; ``keys`` is the path, keys[-1] the leaf name)."""
+    d = "data"
+    m = "model"
+    leaf = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+
+    if leaf in ("embed",):
+        return P(m, d)
+    if leaf == "unembed":
+        return P(d, m)
+    if leaf.startswith("ln") or leaf in ("enc_ln_f",):
+        return P(None)
+    # attention
+    if leaf == "wq":
+        return P(d, m) if r.shard_q_heads else P(d, None)
+    if leaf in ("wk", "wv"):
+        return P(d, m) if r.shard_kv_heads else P(d, None)
+    if leaf == "wo":
+        return P(m, d) if r.shard_q_heads else P(None, d)
+    if leaf == "bq":
+        return P(m) if r.shard_q_heads else P(None)
+    if leaf in ("bk", "bv"):
+        return P(m) if r.shard_kv_heads else P(None)
+    if leaf in ("q_norm", "k_norm"):
+        return P(None)
+    # FFN (dense or per-expert, disambiguated by parent)
+    if leaf in ("w1", "w3"):
+        if parent == "moe":  # (E, d, f)
+            return P(m, d, None) if r.shard_experts else P(None, d, m)
+        return P(d, m)
+    if leaf == "w2":
+        if parent == "moe":  # (E, f, d)
+            return P(m, None, d) if r.shard_experts else P(None, m, d)
+        return P(m, d)
+    if leaf == "b1":
+        return P(m)
+    if leaf == "b2":
+        return P(None)
+    if leaf == "wg":
+        return P(d, None)
+    # mamba
+    if leaf == "in_proj":
+        return P(d, m)
+    if leaf == "conv_w":
+        return P(None, m)
+    if leaf in ("conv_b", "dt_bias", "D"):
+        return P(m)
+    if leaf == "x_proj":
+        return P(m, None)
+    if leaf == "dt_proj":
+        return P(None, m)
+    if leaf == "A_log":
+        return P(m, None)
+    if leaf == "out_proj":
+        return P(m, d)
+    # rwkv6
+    if leaf in ("w_r", "w_k", "w_v", "w_g"):
+        return P(d, m)
+    if leaf == "w_o":
+        return P(m, d)
+    if leaf.startswith("mu"):
+        return P(None)
+    if leaf == "w_decay0":
+        return P(None)
+    if leaf == "w_decay1":
+        return P(d, None)
+    if leaf == "w_decay2":
+        return P(None, m)
+    if leaf in ("u_bonus", "ln_scale"):
+        return P(m, None)
+    if leaf in ("wk_cmix",):
+        return P(d, m)
+    return None
+
+
+def param_pspecs(params, cfg, mesh, mode: str = "2d"):
+    """PartitionSpec pytree mirroring ``params``.
+
+    mode "2d": TP over model + FSDP over data (default).
+    mode "dp": pure data parallelism — params REPLICATED (small models;
+    the batch shards over every mesh axis instead, §Perf iteration R1).
+    """
+    if mode == "dp":
+        return jax.tree_util.tree_map(lambda l: P(*([None] * l.ndim)), params)
+    r = ShardingRules.make(cfg, mesh)
+
+    def visit(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        spath = "/".join(str(k) for k in keys)
+        name = keys[-1]
+        # rwkv channel-mix shares w-names with FFN; disambiguate by parent
+        # stacked block/encoder/xattn params carry a leading scan dim
+        stacked = any(k in ("blocks", "encoder", "xattn") for k in keys[:-1])
+        base_shape = leaf.shape[1:] if stacked else leaf.shape
+        if len(keys) >= 2 and keys[-2] == "cmix":
+            spec = {"wk": P("data", "model"), "wv": P("model", "data")}.get(name, P(None))
+        else:
+            spec = _rule(keys, base_shape, cfg, r)
+        if spec is None:
+            raise ValueError(f"no sharding rule for param {spath} {leaf.shape}")
+        if stacked:
+            spec = P(None, *spec)
+        if len(spec) < len(leaf.shape):
+            spec = P(*(tuple(spec) + (None,) * (len(leaf.shape) - len(spec))))
+        # sanity: every sharded dim must divide
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            size = np.prod([_axis_size(mesh, a) for a in (ax if isinstance(ax, tuple) else (ax,))])
+            if dim % size:
+                raise ValueError(f"{spath}: dim {dim} not divisible by {ax}={size}")
+        return spec
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def zero1_opt_pspecs(params, mesh):
+    """ZeRO-1 moment sharding for dp mode: shard the first dim divisible
+    by the FULL device count over all mesh axes (optimizer memory 1/N,
+    params stay replicated; XLA inserts the reduce-scatter/all-gather
+    pair). Stacked block params have a small leading layer dim, so dim
+    1/2 is usually the one that divides."""
+    axes = tuple(mesh.axis_names)
+    import numpy as _np
+
+    n = int(_np.prod([mesh.shape[a] for a in axes]))
+
+    def visit(l):
+        for i, d in enumerate(l.shape):
+            if d > 0 and d % n == 0:
+                spec = [None] * l.ndim
+                spec[i] = axes
+                return P(*spec)
+        return P(*([None] * l.ndim))
+
+    return jax.tree_util.tree_map(visit, params)
+
+
+def batch_pspecs(batch, mesh, divisible: bool = True, dp_axes: tuple | None = None):
+    """Batch dict -> specs: leading batch dim over (pod, data) when it
+    divides, else replicated (long_500k has batch 1)."""
+    dp = dp_axes if dp_axes is not None else tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def visit(leaf):
+        b = leaf.shape[0]
+        if dp and b % dp_size == 0:
+            return P(dp, *(None,) * (len(leaf.shape) - 1))
+        return P(*(None,) * len(leaf.shape))
+
+    return jax.tree_util.tree_map(visit, batch)
+
+
+def cache_pspecs(cache, cfg, mesh):
+    """Decode cache specs: batch over (pod,data) if divisible; KV cache
+    sequence dim over "model" (split-K decode); SSM feature dims over
+    "model"."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tp = _axis_size(mesh, "model")
+
+    def visit(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", None))) for k in path]
+        name = keys[-1]
+        bdim = 1 if keys[0] in ("blocks", "xattn") else 0  # leading stack dim
+        shape = leaf.shape
+        bspec = dp if (dp and shape[bdim] % dp_size == 0) else None
+        if name in ("k", "v"):
+            # (nb?, B, M, KV, hd): shard sequence M over model
+            seq_ok = shape[bdim + 1] % tp == 0
+            spec = [None] * len(shape)
+            spec[bdim] = bspec
+            spec[bdim + 1] = "model" if seq_ok else None
+            return P(*spec)
+        if name == "conv":
+            spec = [None] * len(shape)
+            spec[bdim] = bspec
+            spec[-1] = "model" if shape[-1] % tp == 0 else None
+            return P(*spec)
+        if name == "h":
+            spec = [None] * len(shape)
+            spec[bdim] = bspec
+            spec[-2] = "model" if shape[-2] % tp == 0 else None
+            return P(*spec)
+        if name == "s":
+            spec = [None] * len(shape)
+            spec[bdim] = bspec
+            spec[bdim + 1] = "model" if shape[bdim + 1] % tp == 0 else None
+            return P(*spec)
+        if name in ("xt", "xc"):
+            spec = [None] * len(shape)
+            spec[bdim] = bspec
+            return P(*spec)
+        if name == "pos":
+            return P(dp if (dp and shape[0] % dp_size == 0) else None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def to_shardings(pspecs, mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)

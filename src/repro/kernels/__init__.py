@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for logzip hot spots (+ pure-jnp oracles in ref.py).
+
+- simcount:        phi(a,b)=|a cap b| similarity, clustering inner loop
+- wildcard_match:  batched greedy-'*' template matching (the trie, TPU-native)
+
+Wrappers with host/pod conveniences live in ops.py; this container runs
+them in interpret mode (CPU), a real TPU runs the compiled kernels.
+"""
+
+from . import ops, ref
+from .simcount import simcount
+from .wildcard_match import wildcard_match
+
+__all__ = ["ops", "ref", "simcount", "wildcard_match"]

@@ -1,0 +1,97 @@
+"""jit'd wrappers + host/pod conveniences for the logzip kernels.
+
+``interpret`` defaults to True (this container is CPU-only); on a real
+TPU set REPRO_PALLAS_INTERPRET=0 to run the compiled kernels.
+
+``wildcard_match_sharded`` is the pod-scale matcher: logs sharded over
+the mesh ``data`` axis, templates replicated — zero-collective data
+parallelism (the paper's "highly parallel matching" mapped onto a pod).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from . import ref
+from .simcount import simcount as _simcount
+from .wildcard_match import wildcard_match as _wildcard_match
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def simcount(logs, templates):
+    """(N, T) x (K, Tt) int32 -> (N, K) int32 common-token counts."""
+    return _simcount(jnp.asarray(logs, jnp.int32), jnp.asarray(templates, jnp.int32),
+                     interpret=INTERPRET)
+
+
+def wildcard_match(logs, lens, templates, t_lens) -> jnp.ndarray:
+    """-> (N, K) bool match matrix."""
+    out = _wildcard_match(
+        jnp.asarray(logs, jnp.int32),
+        jnp.asarray(lens, jnp.int32),
+        jnp.asarray(templates, jnp.int32),
+        jnp.asarray(t_lens, jnp.int32),
+        interpret=INTERPRET,
+    )
+    return out.astype(bool)
+
+
+def pack_templates(templates: list[np.ndarray], t_max: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a ragged template list into (K, Tt) + (K,) length arrays."""
+    if not templates:
+        return np.zeros((0, 1), np.int32), np.zeros((0,), np.int32)
+    tt = t_max or max(len(t) for t in templates)
+    k = len(templates)
+    mat = np.zeros((k, tt), np.int32)
+    lens = np.zeros((k,), np.int32)
+    for i, t in enumerate(templates):
+        lens[i] = len(t)
+        mat[i, : len(t)] = t[:tt]
+    return mat, lens
+
+
+def wildcard_match_host(ids: np.ndarray, lens: np.ndarray, templates: list[np.ndarray]) -> np.ndarray:
+    """numpy in/out convenience used by ``core.match.match_first``."""
+    tmpl, tlens = pack_templates(templates)
+    if tmpl.shape[0] == 0:
+        return np.zeros((ids.shape[0], 0), bool)
+    return np.asarray(wildcard_match(ids, lens, tmpl, tlens))
+
+
+def wildcard_match_sharded(logs, lens, templates, t_lens, mesh: Mesh, axis: str = "data"):
+    """Pod-scale matching: logs sharded over ``axis``, templates replicated.
+
+    Pure data parallelism — the compiled module contains no collectives
+    (asserted in tests), which is the point: matching scales linearly
+    with chips, as the paper's multi-worker experiment scales with cores.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def local(lg, ln, tp, tl):
+        return _wildcard_match(lg, ln[:, 0], tp, tl, interpret=INTERPRET)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(None, None), P(None, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )
+    return fn(
+        jnp.asarray(logs, jnp.int32),
+        jnp.asarray(lens, jnp.int32).reshape(-1, 1),
+        jnp.asarray(templates, jnp.int32),
+        jnp.asarray(t_lens, jnp.int32).reshape(-1, 1),
+    ).astype(bool)
+
+
+# re-export oracles for tests
+simcount_ref = ref.simcount_ref
+wildcard_match_ref = ref.wildcard_match_ref

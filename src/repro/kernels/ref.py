@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the logzip Pallas kernels.
+
+These define the exact semantics the kernels must reproduce; tests sweep
+shapes/dtypes and assert allclose/array_equal against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAD_ID = 0
+STAR_ID = 1
+
+
+def simcount_ref(logs: jnp.ndarray, templates: jnp.ndarray) -> jnp.ndarray:
+    """phi(m, t) = #tokens of each log present in each template.
+
+    logs: (N, T) int32, templates: (K, Tt) int32 -> (N, K) int32.
+    PAD/STAR tokens neither count nor match. Duplicate log tokens count
+    once per occurrence (matches ``core.lcs.common_token_count``).
+    """
+    lv = (logs != PAD_ID) & (logs != STAR_ID)          # (N, T)
+    tv = (templates != PAD_ID) & (templates != STAR_ID)  # (K, Tt)
+    eq = logs[:, None, :, None] == templates[None, :, None, :]  # (N, K, T, Tt)
+    eq = eq & lv[:, None, :, None] & tv[None, :, None, :]
+    present = eq.any(axis=3)                            # (N, K, T)
+    return present.sum(axis=2).astype(jnp.int32)
+
+
+def wildcard_match_ref(
+    logs: jnp.ndarray,
+    lens: jnp.ndarray,
+    templates: jnp.ndarray,
+    t_lens: jnp.ndarray,
+) -> jnp.ndarray:
+    """Existence DP: does log n match template k ('*' absorbs >= 1 token).
+
+    logs: (N, T) int32; lens: (N,) int32; templates: (K, Tt) int32;
+    t_lens: (K,) int32 -> (N, K) bool.
+
+    Column recurrence (see core.match): for each template position j,
+        literal: col[i] = prev[i-1] & (log[i-1] == t_j)
+        star:    col[i] = OR_{i' < i} prev[i']
+    then match = col[len(log)] after t_len steps.
+    """
+    n, t = logs.shape
+    k, tt = templates.shape
+    # col: (N, K, T+1) bool — position i = "first i log tokens consumed"
+    col = jnp.zeros((n, k, t + 1), bool).at[:, :, 0].set(True)
+    for j in range(tt):
+        tj = templates[:, j]                       # (K,)
+        is_star = tj == STAR_ID                    # (K,)
+        run = jnp.cumsum(col, axis=2) > 0          # prefix OR
+        star_col = jnp.concatenate([jnp.zeros((n, k, 1), bool), run[:, :, :-1]], axis=2)
+        lit_hit = logs[:, None, :] == tj[None, :, None]  # (N, K, T)
+        lit_col = jnp.concatenate(
+            [jnp.zeros((n, k, 1), bool), col[:, :, :-1] & lit_hit], axis=2
+        )
+        new = jnp.where(is_star[None, :, None], star_col, lit_col)
+        active = (j < t_lens)[None, :, None]       # template still has tokens
+        col = jnp.where(active, new, col)
+    idx = jnp.clip(lens, 0, t)[:, None, None]      # (N,1,1)
+    matched = jnp.take_along_axis(col, idx.astype(jnp.int32), axis=2)[:, :, 0]
+    return matched & (lens <= t)[:, None]

@@ -1,0 +1,112 @@
+"""Pallas kernel: batched wildcard-template matching (logzip's matcher).
+
+The paper's prefix tree compares one log against all templates in one
+pass on a CPU. The TPU-native equivalent (DESIGN.md §2) is the dense
+reachability DP over (log-block x template-block) tiles:
+
+    col[i] <- prev[i-1] & (log_i == t_j)     (literal t_j)
+    col[i] <- OR_{i'<i} prev[i']             (t_j == '*', absorbs >= 1)
+
+Each template position is one branch-free VPU update over the whole
+(BN, T+1) column tile, so a tile costs O(BK * Tt) vector ops — the same
+work the trie does, but data-parallel over BN logs and with zero control
+flow divergence. PAD tokens (id 0) can never equal a template literal
+(ids >= 2), so no per-position masking is needed: correctness only
+requires reading the column at exactly i = len(log).
+
+Outputs int8 {0,1} (TPU has no bool memory type); ops.py exposes bool.
+
+VMEM per program (BN=256, BK=8, T=128, Tt=64):
+  logs 128 KiB + templates 2 KiB + col (256x129 int8) 32 KiB + out 2 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD_ID = 0
+STAR_ID = 1
+
+BN = 256  # logs per tile
+BK = 8    # templates per tile
+
+
+def _match_kernel(logs_ref, lens_ref, tmpl_ref, tlen_ref, out_ref):
+    logs = logs_ref[...]            # (BN, T)
+    lens = lens_ref[...][:, 0]      # (BN,)
+    tmpl = tmpl_ref[...]            # (BK, Tt)
+    tlens = tlen_ref[...][:, 0]     # (BK,)
+    bn, t = logs.shape
+    bk, tt = tmpl.shape
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bn, t + 1), 1)
+    at_len = pos == lens[:, None]   # one-hot of len(log) per row
+
+    def per_template(k, out):
+        tlen = tlens[k]
+
+        def per_token(j, col):
+            tj = tmpl[k, j]
+            is_star = tj == STAR_ID
+            # prefix-OR then shift right by one (star absorbs >= 1 token)
+            run = jnp.cumsum(col, axis=1)
+            run = jnp.minimum(run, 1)
+            star_col = jnp.concatenate([jnp.zeros((bn, 1), col.dtype), run[:, :-1]], axis=1)
+            lit = (logs == tj).astype(col.dtype)
+            lit_col = jnp.concatenate([jnp.zeros((bn, 1), col.dtype), col[:, :-1] * lit], axis=1)
+            new = jnp.where(is_star, star_col, lit_col)
+            return jnp.where(j < tlen, new, col)
+
+        col0 = jnp.concatenate(
+            [jnp.ones((bn, 1), jnp.int32), jnp.zeros((bn, t), jnp.int32)], axis=1
+        )
+        col = jax.lax.fori_loop(0, tt, per_token, col0)
+        hit = (col * at_len.astype(col.dtype)).sum(axis=1)  # col[i = len]
+        hit = hit * (lens <= t).astype(col.dtype)
+        return out.at[:, k].set(hit.astype(jnp.int8))
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, bk, per_template, jnp.zeros(out_ref.shape, jnp.int8)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wildcard_match(
+    logs: jnp.ndarray,
+    lens: jnp.ndarray,
+    templates: jnp.ndarray,
+    t_lens: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(N,T),(N,) x (K,Tt),(K,) int32 -> (N, K) int8 {0,1} match matrix.
+
+    Padded templates must carry t_len = -1 so they match nothing
+    (ops.py handles this).
+    """
+    n, t = logs.shape
+    k, tt = templates.shape
+    n_pad = -n % BN
+    k_pad = -k % BK
+    logs_p = jnp.pad(logs, ((0, n_pad), (0, 0)))
+    lens_p = jnp.pad(lens, ((0, n_pad),)).reshape(-1, 1)
+    tmpl_p = jnp.pad(templates, ((0, k_pad), (0, 0)))
+    tlen_p = jnp.pad(t_lens, ((0, k_pad),), constant_values=-1).reshape(-1, 1)
+    out = pl.pallas_call(
+        _match_kernel,
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, k + k_pad), jnp.int8),
+        grid=((n + n_pad) // BN, (k + k_pad) // BK),
+        in_specs=[
+            pl.BlockSpec((BN, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((BK, tt), lambda i, j: (j, 0)),
+            pl.BlockSpec((BK, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BN, BK), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(logs_p, lens_p, tmpl_p, tlen_p)
+    return out[:n, :k]

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, AOT dry-run, train/serve/compress CLIs."""

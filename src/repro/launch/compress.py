@@ -1,0 +1,68 @@
+"""logzip CLI.
+
+    PYTHONPATH=src python -m repro.launch.compress pack in.log out.lzj \
+        --format "<Date> <Time> <Level> <Component>: <Content>" --level 3 --workers 4
+    PYTHONPATH=src python -m repro.launch.compress unpack out.lzj back.log
+    PYTHONPATH=src python -m repro.launch.compress inspect out.lzj
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("pack")
+    p.add_argument("infile")
+    p.add_argument("outfile")
+    p.add_argument("--format", default=None)
+    p.add_argument("--level", type=int, default=3)
+    p.add_argument("--kernel", default="gzip", choices=["gzip", "bzip2", "lzma"])
+    p.add_argument("--workers", type=int, default=1)
+    p.add_argument("--chunk-lines", type=int, default=None)
+    u = sub.add_parser("unpack")
+    u.add_argument("infile")
+    u.add_argument("outfile")
+    u.add_argument("--workers", type=int, default=1)
+    i = sub.add_parser("inspect")
+    i.add_argument("infile")
+    args = ap.parse_args()
+
+    from repro.core.codec import LogzipConfig, read_structured
+    from repro.core.parallel import compress_parallel, decompress_parallel
+
+    if args.cmd == "pack":
+        with open(args.infile, encoding="utf-8", errors="surrogateescape") as f:
+            lines = f.read().split("\n")
+        raw = sum(len(l.encode("utf-8", "surrogateescape")) + 1 for l in lines) - 1
+        blob = compress_parallel(lines, LogzipConfig(level=args.level, kernel=args.kernel,
+                                                     format=args.format),
+                                 n_workers=args.workers, chunk_lines=args.chunk_lines)
+        with open(args.outfile, "wb") as f:
+            f.write(blob)
+        print(f"{raw/1e6:.2f} MB -> {len(blob)/1e6:.3f} MB (CR {raw/len(blob):.1f}x)")
+    elif args.cmd == "unpack":
+        with open(args.infile, "rb") as f:
+            blob = f.read()
+        lines = decompress_parallel(blob, n_workers=args.workers)
+        with open(args.outfile, "w", encoding="utf-8", errors="surrogateescape") as f:
+            f.write("\n".join(lines))
+        print(f"wrote {len(lines)} lines to {args.outfile}")
+    else:
+        with open(args.infile, "rb") as f:
+            blob = f.read()
+        if blob[:4] == b"LZJM":
+            print("multi-chunk archive; inspecting chunks is per-chunk")
+            sys.exit(0)
+        s = read_structured(blob)
+        print(f"lines: {s['meta']['n']}  level: {s['meta']['level']}  "
+              f"templates: {len(s['templates'])}  match_rate: {s['match_rate']:.3f}")
+        for t in s["templates"][:20]:
+            print("  ", t)
+
+
+if __name__ == "__main__":
+    main()

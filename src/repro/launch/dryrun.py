@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Everything below is ordinary code.
+
+"""Multi-pod AOT dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step, in_shardings, out_shardings).lower(**input_specs(...))
+      .compile()
+then print memory_analysis() (fits-per-device proof) and
+cost_analysis(), run the structural HLO cost model (launch.hlo_cost:
+while-trip-corrected FLOPs / HBM bytes / ring-model collective bytes),
+and write a JSON artifact for benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.distributed.sharding import batch_pspecs, cache_pspecs, param_pspecs, to_shardings
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models import ModelConfig, init_cache, init_params, tp_pad
+from repro.optim.adamw import adamw_init
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step
+
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def default_microbatches(cfg: ModelConfig, batch: int = 256, dp_size: int = 16) -> int:
+    """Grad-accum depth so activations fit 16 GB HBM (hillclimb lever).
+
+    Capped so each microbatch still covers the DP axes — a microbatch
+    smaller than dp_size gets replicated by GSPMD (measured 10x memory
+    blowup on the multi-pod MoE trains, §Perf iteration M1)."""
+    n = analytic_params(cfg)["total"]
+    if n > 100e9:
+        mb = 16
+    elif n > 30e9:
+        mb = 16
+    elif n > 2e9:
+        mb = 4
+    else:
+        mb = 1
+    return max(1, min(mb, batch // max(dp_size, 1)))
+
+
+def analytic_params(cfg: ModelConfig) -> dict:
+    """Total and per-token-active param counts (MODEL_FLOPS = 6*N_active*D)."""
+    d, f, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.padded_vocab
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    total = V * d * (1 if cfg.tie_embeddings else 2)
+    active = total
+    for i in range(L):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            a = d * h * hd + 2 * d * kv * hd + h * hd * d
+        elif kind == "mamba":
+            di, ds, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+            a = d * 2 * di + cfg.ssm_conv * di + di * (dr + 2 * ds) + dr * di + di * ds + di + di * d
+        else:
+            a = 4 * d * d + 2 * d * cfg.rwkv_decay_lora
+        total += a
+        active += a
+        if kind == "rwkv6":
+            total += 2 * d * f
+            active += 2 * d * f
+        else:
+            nmat = 3 if cfg.ffn_act == "swiglu" else 2
+            if cfg.layer_is_moe(i):
+                total += d * cfg.n_experts + cfg.n_experts * nmat * d * f
+                active += d * cfg.n_experts + cfg.top_k * nmat * d * f
+            else:
+                total += nmat * d * f
+                active += nmat * d * f
+    if cfg.n_enc_layers:
+        enc = cfg.n_enc_layers * (2 * d * h * hd + 2 * d * kv * hd + 2 * d * f)
+        x = L * (2 * d * h * hd + 2 * d * kv * hd)
+        total += enc + x
+        active += enc + x
+    return {"total": total, "active": active}
+
+
+def input_specs(arch: str, shape: str, cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    info = SHAPES[shape]
+    s, b = info["seq"], info["batch"]
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.bfloat16
+    if info["kind"] in ("train", "prefill"):
+        toks = s - (cfg.n_patches or 0)
+        batch = {"tokens": sds((b, toks), jnp.int32)}
+        if info["kind"] == "train":
+            batch["labels"] = sds((b, toks), jnp.int32)
+        if cfg.n_patches:
+            batch["vision"] = sds((b, cfg.n_patches, cfg.d_model), dt)
+        if cfg.n_enc_layers:
+            batch["frames"] = sds((b, cfg.n_frames, cfg.d_model), dt)
+        return {"batch": batch}
+    # decode: one new token against an s-long cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {"cache": cache, "tokens": sds((b, 1), jnp.int32)}
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    info = SHAPES[shape]
+    n_active = analytic_params(cfg)["active"]
+    tokens = info["batch"] * (info["seq"] if info["kind"] in ("train", "prefill") else 1)
+    mult = 6.0 if info["kind"] == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def parallel_mode(cfg: ModelConfig, shape: str) -> str:
+    """Pure-DP (+ZeRO-1) for small-model training: with d_model ~1-2k a
+    16-way TP spends more on per-layer activation all-reduces than on
+    math (§Perf iteration R1). Threshold: replicated bf16 params + ZeRO-1
+    moments must fit comfortably; batch must cover the whole mesh."""
+    n = analytic_params(cfg)["total"]
+    info = SHAPES[shape]
+    if info["kind"] == "train" and n <= 2.2e9:
+        return "dp"
+    return "2d"
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, microbatches: int | None = None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.distributed.act_shard import install_mesh
+    from repro.distributed.sharding import zero1_opt_pspecs
+
+    tp = mesh.shape["model"]
+    cfg = tp_pad(get_config(arch), tp)
+    info = SHAPES[shape]
+    mode = parallel_mode(cfg, shape)
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    if mode == "dp" and SHAPES[shape]["batch"] % n_chips == 0:
+        dp_axes = tuple(mesh.axis_names)
+        install_mesh(mesh, dp_axes=dp_axes, tp=False)
+        # dp-mode keeps the vocab unsharded -> use the vocab-chunked loss
+        # so (B,S,V) fp32 logits never materialize (§Perf iteration R3)
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, vocab_chunk=8192)
+    else:
+        mode = "2d"
+        dp_axes = None
+        install_mesh(mesh)  # activation sharding constraints inside the model
+
+    params_s = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    p_specs = param_pspecs(params_s, cfg, mesh, mode=mode)
+    sh = lambda spec: NamedSharding(mesh, spec)
+    p_shard = to_shardings(p_specs, mesh)
+
+    specs = input_specs(arch, shape, cfg)
+    t0 = time.time()
+    if info["kind"] == "train":
+        dp_size = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp_size *= mesh.shape[a]
+        if microbatches is not None:
+            mb = microbatches
+        elif mode == "dp":
+            mb = 1
+        else:
+            mb = default_microbatches(cfg, info["batch"], dp_size)
+        opt_s = jax.eval_shape(lambda p: adamw_init(p), params_s)
+        m_specs = zero1_opt_pspecs(params_s, mesh) if mode == "dp" else p_specs
+        o_specs = {"mu": m_specs, "nu": m_specs, "step": P()}
+        o_shard = to_shardings(o_specs, mesh)
+        b_shard = to_shardings(batch_pspecs(specs["batch"], mesh, dp_axes=dp_axes), mesh)
+        step = make_train_step(cfg, microbatches=mb)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+        )
+        lowered = jitted.lower(params_s, opt_s, specs["batch"])
+    elif info["kind"] == "prefill":
+        step = make_prefill_step(cfg)
+        b_shard = to_shardings(batch_pspecs(specs["batch"], mesh), mesh)
+        cache_s = jax.eval_shape(step, params_s, specs["batch"])[1]
+        c_shard = to_shardings(cache_pspecs(cache_s, cfg, mesh), mesh)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard), out_shardings=(None, c_shard))
+        lowered = jitted.lower(params_s, specs["batch"])
+    else:  # decode
+        step = make_decode_step(cfg)
+        c_shard = to_shardings(cache_pspecs(specs["cache"], cfg, mesh), mesh)
+        t_shard = to_shardings(batch_pspecs({"t": specs["tokens"]}, mesh), mesh)["t"]
+        jitted = jax.jit(step, in_shardings=(p_shard, c_shard, t_shard), out_shardings=(None, c_shard))
+        lowered = jitted.lower(params_s, specs["cache"], specs["tokens"])
+    t_lower = time.time() - t0
+    return mesh, cfg, lowered, t_lower, (microbatches or (default_microbatches(cfg) if info["kind"] == "train" else 0))
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str, microbatches=None, save_hlo=False) -> dict:
+    multi = mesh_kind == "multi"
+    n_dev = 512 if multi else 256
+    print(f"=== {arch} x {shape} x {mesh_kind} ({n_dev} chips) ===", flush=True)
+    mesh, cfg, lowered, t_lower, mb = lower_cell(arch, shape, multi, microbatches)
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)  # proves it fits per device
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ca_flops = float(ca.get("flops", -1))
+    ca_bytes = float(ca.get("bytes accessed", -1))
+    print({"xla_cost_flops": ca_flops, "xla_cost_bytes": ca_bytes})
+
+    txt = compiled.as_text()
+    costs = hlo_cost.analyze(txt, n_dev)
+    terms = hlo_cost.roofline_terms(costs)
+    mf = model_flops(cfg, shape)
+
+    art = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "chips": n_dev,
+        "microbatches": mb,
+        "padded_heads": cfg.n_heads,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {"flops": ca_flops, "bytes": ca_bytes},
+        "hlo_cost": {
+            "flops_per_device": costs["flops"],
+            "hbm_bytes_per_device": costs["hbm_bytes"],
+            "convert_bytes_per_device": costs["convert_bytes"],
+            "collective_bytes": costs["collective_bytes"],
+            "collective_count": costs["collective_count"],
+            "collective_bytes_total": costs["collective_bytes_total"],
+            "dot_count": costs["dot_count"],
+        },
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / max(costs["flops"], 1.0),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape}__{mesh_kind}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(art, f, indent=1)
+    if save_hlo:
+        import gzip
+
+        with gzip.open(os.path.join(out_dir, name + ".hlo.txt.gz"), "wt") as f:
+            f.write(txt)
+    print(json.dumps({k: art[k] for k in ("roofline", "useful_flops_ratio", "compile_s")}, indent=1), flush=True)
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACT_DIR))
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                if shape_applicable(a, s):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for a, s in cells:
+        for m in meshes:
+            try:
+                run_cell(a, s, m, args.out, args.microbatches, args.save_hlo)
+            except Exception as e:  # record and continue the sweep
+                failures.append((a, s, m, repr(e)))
+                print(f"FAILED {a} {s} {m}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

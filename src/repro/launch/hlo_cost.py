@@ -1,0 +1,330 @@
+"""Structural cost model over compiled HLO text.
+
+Why: on this CPU container we cannot time a TPU, and
+``compiled.cost_analysis()`` counts ``while`` bodies ONCE (verified in
+tests) — a scanned 64-layer transformer would be undercounted 64x. This
+parser walks the executed computation graph, multiplies loop bodies by
+their ``known_trip_count`` (recorded by XLA in backend_config), and
+derives the three roofline terms:
+
+- FLOPs: exact for dot (2 * prod(result) * prod(contracted dims)) and
+  convolution; elementwise ops are ignored (sub-1% for these models).
+- HBM bytes: sum of (operand + result) bytes at fusion boundaries —
+  fused interiors stay in registers/VMEM, boundary ops are the traffic.
+  An *approximation* of a TPU executable's traffic (CPU fusion !=
+  TPU fusion) but structurally faithful; stated in EXPERIMENTS.md.
+- Collective bytes: ring-model per-device wire traffic:
+    all-reduce 2(g-1)/g * size, all-gather/all-to-all (g-1)/g * size,
+    reduce-scatter (g-1)/g * operand size, collective-permute 1x.
+
+Verified against analytic 6ND on dense cells (tests + EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(\(?[^)]*?\)?[\w\[\],\{\} ]*?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attrs
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: dict = field(default_factory=dict)   # name -> Op
+    order: list = field(default_factory=list)
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    """-> ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and line.rstrip().endswith("{"):
+            cur = Computation(mc.group(1).lstrip("%"))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            name = mo.group(1).lstrip("%")
+            op = Op(name, mo.group(2).strip(), mo.group(3), mo.group(4))
+            cur.ops[name] = op
+            cur.order.append(name)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+_CALL_ATTRS = [
+    ("calls", re.compile(r"calls=(%?[\w\.\-]+)")),
+    ("to_apply", re.compile(r"to_apply=(%?[\w\.\-]+)")),
+]
+_WHILE_BODY = re.compile(r"body=(%?[\w\.\-]+)")
+_WHILE_COND = re.compile(r"condition=(%?[\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_V1 = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _group_size(rest: str, n_devices: int) -> int:
+    m = _GROUPS_V1.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2.search(rest)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+def _operand_shapes(op: Op, comp: Computation, limit: int | None = None) -> list[str]:
+    """Resolve operand type strings from their defining ops (same comp)."""
+    # operands are the %names before the first `,` that starts attrs; just
+    # scan all and keep those that resolve.
+    out = []
+    head = op.rest.split("),")[0]
+    for m in _OPERANDS.finditer(head):
+        d = comp.ops.get(m.group(1))
+        if d is not None:
+            out.append(d.type_str)
+        if limit and len(out) >= limit:
+            break
+    return out
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res = _shape_dims(op.type_str)
+    n_res = 1
+    for d in res:
+        n_res *= d
+    lhs_shapes = _operand_shapes(op, comp, limit=1)
+    mc = _CONTRACT.search(op.rest)
+    contract = 1
+    if lhs_shapes and mc and mc.group(1):
+        dims = _shape_dims(lhs_shapes[0])
+        for i in mc.group(1).split(","):
+            i = int(i)
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * n_res * contract
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    res = _shape_dims(op.type_str)
+    n_res = 1
+    for d in res:
+        n_res *= d
+    shapes = _operand_shapes(op, comp, limit=2)
+    if len(shapes) < 2:
+        return 0.0
+    rhs = _shape_dims(shapes[1])
+    # kernel contribution ~ prod(rhs) / out_features (approximate)
+    k = 1
+    for d in rhs:
+        k *= d
+    of = max(res[-1] if res else 1, 1)
+    return 2.0 * n_res * max(k // of, 1)
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+               "after-all", "add-dependency", "iota"}
+
+
+def analyze(text: str, n_devices: int = 1) -> dict:
+    """Walk the entry computation; returns per-device flops/bytes/collectives."""
+    comps, entry = parse_hlo(text)
+    totals = {
+        "flops": 0.0,
+        "hbm_bytes": 0.0,
+        "convert_bytes": 0.0,  # pure-dtype-convert traffic: a CPU-backend
+        # artifact (XLA CPU lowers bf16 dots via f32 converts and hoists
+        # them into whole-buffer passes; TPU MXUs read bf16 natively).
+        # hbm_bytes - convert_bytes is the TPU-adjusted memory term.
+        "collective_bytes": defaultdict(float),
+        "collective_count": defaultdict(int),
+        "dot_count": 0,
+    }
+
+    def _is_pure_convert(called_name: str) -> bool:
+        inner = comps.get(called_name.lstrip("%"))
+        if inner is None:
+            return False
+        kinds = {o.opcode for o in inner.ops.values()}
+        return "convert" in kinds and not (
+            kinds - {"convert", "bitcast", "copy", "parameter", "tuple", "get-tuple-element"}
+        )
+
+    def walk(comp_name: str, mult: float, count_bytes: bool):
+        comp = comps.get(comp_name.lstrip("%"))
+        if comp is None:
+            return
+        for name in comp.order:
+            op = comp.ops[name]
+            oc = op.opcode
+            if oc == "while":
+                body = _WHILE_BODY.search(op.rest)
+                cond = _WHILE_COND.search(op.rest)
+                trip = 1
+                mt = _TRIP.search(op.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                if body:
+                    walk(body.group(1), mult * trip, count_bytes)
+                if cond:
+                    walk(cond.group(1), mult * trip, count_bytes)
+                continue
+            if oc == "conditional":
+                mb = _BRANCHES.search(op.rest)
+                if mb:
+                    for b in mb.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult, count_bytes)
+                continue
+            called = None
+            for _, rx in _CALL_ATTRS:
+                m = rx.search(op.rest)
+                if m:
+                    called = m.group(1)
+                    break
+            if oc == "dot":
+                totals["flops"] += mult * _dot_flops(op, comp)
+                totals["dot_count"] += 1
+            elif oc == "convolution":
+                totals["flops"] += mult * _conv_flops(op, comp)
+            elif oc in COLLECTIVES or (oc.endswith("-start") and oc[:-6] in COLLECTIVES):
+                base = oc[:-6] if oc.endswith("-start") else oc
+                g = _group_size(op.rest, n_devices)
+                size = _shape_bytes(op.type_str)
+                if base == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    wire = size * (g - 1)  # operand = size * g
+                elif base == "collective-permute":
+                    wire = size
+                else:  # all-gather, all-to-all
+                    wire = size * (g - 1) / max(g, 1)
+                totals["collective_bytes"][base] += mult * wire
+                totals["collective_count"][base] += int(mult)
+            if called is not None and oc in ("fusion", "call", "map", "reduce", "sort",
+                                             "reduce-window", "scatter", "select-and-scatter",
+                                             "custom-call", "all-reduce"):
+                # count dots inside called computations (flops only)
+                walk(called, mult, False)
+            # HBM traffic at fusion boundaries.
+            # Slice-family ops alias their big operand (XLA reads a
+            # window / updates in place): bill the bytes actually moved,
+            # not the full loop-carried buffer per iteration. For fusions
+            # we inspect the CALLED computation for slice ops.
+            if count_bytes and oc not in _SKIP_BYTES and not oc.endswith("-done"):
+                res = _shape_bytes(op.type_str)
+                opnds = [_shape_bytes(s) for s in _operand_shapes(op, comp)]
+                kind = oc
+                if oc == "fusion" and called is not None:
+                    inner = comps.get(called.lstrip("%"))
+                    inner_ops = {o.opcode for o in inner.ops.values()} if inner else set()
+                    if "dynamic-update-slice" in inner_ops or "scatter" in inner_ops:
+                        kind = "dynamic-update-slice"
+                    elif "dynamic-slice" in inner_ops or "gather" in inner_ops:
+                        kind = "dynamic-slice"
+                if kind in ("dynamic-slice", "gather"):
+                    b = 2 * res + 64
+                elif kind in ("dynamic-update-slice", "scatter"):
+                    moved = sum(opnds) - (max(opnds) if opnds else 0)
+                    b = 2 * max(moved, res if res < max(opnds or [0]) else 0) + 64
+                else:
+                    b = res + sum(opnds)
+                totals["hbm_bytes"] += mult * b
+                if oc == "convert" or (oc == "fusion" and called is not None and _is_pure_convert(called)):
+                    totals["convert_bytes"] += mult * b
+
+    walk(entry, 1.0, True)
+    totals["collective_bytes"] = dict(totals["collective_bytes"])
+    totals["collective_count"] = dict(totals["collective_count"])
+    totals["collective_bytes_total"] = sum(totals["collective_bytes"].values())
+    return totals
+
+
+# --------------------------------------------------------- roofline terms
+
+V5E = {
+    "peak_flops": 197e12,   # bf16 / chip
+    "hbm_bw": 819e9,        # B/s
+    "ici_bw": 50e9,         # B/s per link (~per-device injection)
+}
+
+
+def roofline_terms(costs: dict, chips_unused: int = 1) -> dict:
+    """Per-device seconds for each roofline term (costs are per-device).
+
+    t_memory_tpu_s strips pure-dtype-convert traffic — a CPU-lowering
+    artifact absent on bf16-native TPU MXUs (methodology in hlo_cost).
+    """
+    t_compute = costs["flops"] / V5E["peak_flops"]
+    t_memory = costs["hbm_bytes"] / V5E["hbm_bw"]
+    t_memory_tpu = (costs["hbm_bytes"] - costs.get("convert_bytes", 0.0)) / V5E["hbm_bw"]
+    t_coll = costs["collective_bytes_total"] / V5E["ici_bw"]
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory_tpu), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_tpu_s": t_memory_tpu,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_time_lower_bound_s": max(t_compute, t_memory_tpu, t_coll),
+    }

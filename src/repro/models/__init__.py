@@ -1,0 +1,25 @@
+"""Model zoo: one param tree + pure functions for all assigned families.
+
+API:
+    cfg     = ModelConfig(...) (see repro.configs for the assigned archs)
+    params  = init_params(cfg, rng)
+    logits, aux = forward(params, cfg, batch)
+    loss, metrics = loss_fn(params, cfg, batch)
+    logits, cache = prefill(params, cfg, batch, max_len)
+    logits, cache = decode_step(params, cfg, cache, tokens)
+"""
+
+from .config import ModelConfig
+from .serving import decode_step, init_cache, prefill
+from .transformer import forward, init_params, loss_fn, tp_pad
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "tp_pad",
+]

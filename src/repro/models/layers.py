@@ -1,0 +1,151 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (chunked-flash for long
+sequences, one-token decode against a KV cache), dense FFN.
+
+All functions are pure; params are plain dicts of jnp arrays. Compute
+dtype follows the inputs (bf16); softmax/norm statistics accumulate in
+fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) by head repetition."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(b, s, kv * n_rep, hd)
+
+
+def attention(q, k, v, *, causal: bool, q_chunk: int = 0, k_chunk: int = 1024, kv_len=None):
+    """KV-chunked (flash-style) multi-head attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    kv_len: optional (B,) valid KV prefix length (decode masking).
+
+    One `lax.scan` over KV chunks with a remat'd body: the (B, H, Sq,
+    k_chunk) score tile is never saved for backward — only the running
+    (acc, max, denom) carries are, so train-time attention memory is
+    O(Sq * k_chunk) transient + O(nk * Sq * hd) residuals per layer.
+    Q-chunking is unnecessary once heads/batch are sharded (tile fits
+    VMEM-scale budgets) and avoiding the second loop keeps GSPMD's
+    sharding propagation simple. ``q_chunk`` is accepted for config
+    compatibility and ignored.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scale = hd ** -0.5
+
+    k_chunk = min(k_chunk, sk)
+    while sk % k_chunk:  # largest divisor <= requested (prod shapes are 2^k)
+        k_chunk -= 1
+    nk = sk // k_chunk
+
+    qf = q.astype(jnp.float32) * scale
+    kc = jnp.moveaxis(k.reshape(b, nk, k_chunk, h, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, k_chunk, h, hd), 1, 0)
+    qpos = jnp.arange(sq)
+
+    def kv_block(carry, inp):
+        ki, k_blk, v_blk = inp
+        acc, m, denom = carry
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_blk.astype(jnp.float32))
+        kpos = ki * k_chunk + jnp.arange(k_chunk)
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        if kv_len is not None:
+            mask = kpos[None, :] < kv_len[:, None]
+            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        denom = denom * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, v_blk.astype(jnp.float32))
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, denom), _ = jax.lax.scan(
+        jax.checkpoint(kv_block, prevent_cse=False),
+        (acc0, m0, d0),
+        (jnp.arange(nk), kc, vc),
+    )
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len):
+    """One-token attention against a cache — split-K over the sequence.
+
+    q: (B, 1, H, hd); caches: (B, S, KV, hd); kv_len: (B,) valid length
+    (the new token's K/V must already be written at kv_len - 1).
+
+    GQA-native: q is folded to (B, KV, H/KV, hd) and contracted straight
+    against the cache — no KV head repetition, so a seq-sharded cache
+    STAYS seq-sharded (the scores inherit P(..., "model") on S and the
+    output psums a tiny (B, H, hd)). Letting XLA repeat KV heads instead
+    re-shards (= all-gathers) the whole 32k cache per layer: 56 GB/step
+    measured, EXPERIMENTS.md §Perf iteration D1.
+    """
+    from repro.distributed.act_shard import shard_act
+
+    b, _, h, hd = q.shape
+    s_len, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    # keep operands in storage dtype and accumulate fp32 via
+    # preferred_element_type: an explicit .astype(f32) on the cache gets
+    # hoisted by XLA into a full-cache convert (4x cache traffic/step,
+    # §Perf iteration D2).
+    q2 = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", q2, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    s = shard_act(s, ("batch", None, None, "model"))  # keep S sharded
+    mask = jnp.arange(s_len)[None, :] < kv_len[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def ffn(x, params, act: str):
+    """Dense FFN. swiglu: w1 (gate), w3 (up), w2 (down); gelu: w1, w2."""
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    else:
+        h = jax.nn.gelu(x @ params["w1"] + params.get("b1", 0))
+    out = h @ params["w2"]
+    if "b2" in params:
+        out = out + params["b2"]
+    return out

@@ -1,0 +1,124 @@
+"""Mamba (S6) selective-state-space layer, TPU-adapted.
+
+The CUDA reference implements a fused recurrent scan. On TPU we use a
+*chunked* formulation: `lax.scan` across chunks carries the (B, d_inner,
+d_state) state; inside a chunk a parallel `associative_scan` composes the
+per-step affine maps (a, b) -> h = a*h + b. This keeps the sequential
+depth at L/chunk while bounding the materialized (B, chunk, d_inner,
+d_state) tensors (DESIGN.md §5).
+
+Decode is the O(1) recurrence on (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import shard_act
+
+
+def init_params(key, cfg, dtype):
+    d, di, ds, dr, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    k = jax.random.split(key, 6)
+    lim = lambda fan: 1.0 / jnp.sqrt(fan)
+    p = {
+        "in_proj": (jax.random.normal(k[0], (d, 2 * di)) * lim(d)).astype(dtype),
+        "conv_w": (jax.random.normal(k[1], (dc, di)) * lim(dc)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(k[2], (di, dr + 2 * ds)) * lim(di)).astype(dtype),
+        "dt_proj": (jax.random.normal(k[3], (dr, di)) * lim(dr)).astype(dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),  # softplus(-2) ~ small dt
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(k[4], (di, d)) * lim(di)).astype(dtype),
+    }
+    return p
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv via shifted adds. u: (B, L, di), w: (dc, di)."""
+    dc = w.shape[0]
+    out = u * w[-1]
+    for j in range(1, dc):
+        shifted = jnp.pad(u, ((0, 0), (j, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[dc - 1 - j]
+    return out + b
+
+
+def _ssm_inputs(u, p, cfg):
+    """Common projections. u: (B, L, di) post-conv post-silu."""
+    ds, dr = cfg.ssm_state, cfg.dt_rank
+    dbc = u @ p["x_proj"]
+    dt_r, bmat, cmat = jnp.split(dbc, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(p["A_log"])                       # (di, ds) fp32
+    decay = jnp.exp(dt[..., None] * a_neg)             # (B, L, di, ds)
+    inject = (dt * u.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[..., None, :]
+    return decay, inject, cmat, dt
+
+
+def mamba_seq(x, p, cfg, h0=None):
+    """Full-sequence forward. x: (B, L, d) -> (y (B, L, d),
+    (conv_tail (B, dc-1, di), h_last)) — the tuple is the decode state."""
+    b, l, _ = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    u_pre, z = jnp.split(x @ p["in_proj"], 2, axis=-1)
+    u_pre = shard_act(u_pre, ("batch", None, "model"))
+    z = shard_act(z, ("batch", None, "model"))
+    u = jax.nn.silu(_causal_conv(u_pre, p["conv_w"], p["conv_b"]))
+    decay, inject, cmat, _ = _ssm_inputs(u, p, cfg)
+
+    cl = min(cfg.ssm_chunk, l)
+    assert l % cl == 0, (l, cl)
+    nc = l // cl
+    decay_c = decay.reshape(b, nc, cl, di, ds)
+    inject_c = inject.reshape(b, nc, cl, di, ds)
+
+    def chunk_step(h, inp):
+        dk, ij = inp  # (B, cl, di, ds)
+        dk = shard_act(dk, ("batch", None, "model", None))
+        ij = shard_act(ij, ("batch", None, "model", None))
+
+        def comb(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a2 * a1, a2 * b1 + b2
+
+        a_pref, b_pref = jax.lax.associative_scan(comb, (dk, ij), axis=1)
+        hs = a_pref * h[:, None] + b_pref            # (B, cl, di, ds)
+        return hs[:, -1], hs
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32) if h0 is None else h0
+    h_last, hs = jax.lax.scan(
+        chunk_step, h0, (jnp.moveaxis(decay_c, 1, 0), jnp.moveaxis(inject_c, 1, 0))
+    )
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, l, di, ds)
+    y = (hs * cmat.astype(jnp.float32)[:, :, None, :]).sum(-1)
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    conv_tail = u_pre[:, -(cfg.ssm_conv - 1):]
+    return y @ p["out_proj"], (conv_tail, h_last)
+
+
+def mamba_decode(x, p, cfg, state):
+    """One token. x: (B, 1, d); state = (conv_state (B, dc-1, di), h (B, di, ds))."""
+    conv_st, h = state
+    u, z = jnp.split(x @ p["in_proj"], 2, axis=-1)     # (B, 1, di)
+    dc = cfg.ssm_conv
+    window = jnp.concatenate([conv_st, u], axis=1)      # (B, dc, di)
+    u_conv = (window * p["conv_w"]).sum(axis=1, keepdims=True) + p["conv_b"]
+    u_act = jax.nn.silu(u_conv)
+    decay, inject, cmat, _ = _ssm_inputs(u_act, p, cfg)
+    h_new = decay[:, 0] * h + inject[:, 0]              # (B, di, ds)
+    y = (h_new[:, None] * cmat.astype(jnp.float32)[:, :, None, :]).sum(-1)
+    y = y + p["D"] * u_act.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], (window[:, 1:], h_new)
+
+
+def init_state(batch, cfg, dtype):
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with two TPU dispatch strategies.
+
+- ``einsum`` (default): GShard/Switch-style one-hot dispatch/combine in
+  GShard's 2D (groups x group_size) layout — capacity is LOCAL to a
+  group of ``group`` tokens, so dispatch/combine einsum FLOPs stay a
+  bounded fraction of expert FLOPs. (A single global capacity makes the
+  dispatch O(tokens^2): measured 10-500x compute waste on the 32k
+  prefill cells — EXPERIMENTS.md §Perf iteration 1.) SPMD-friendly —
+  experts shard over the ``model`` axis.
+- ``sort``: MegaBlocks-flavoured gather/scatter dispatch — tokens are
+  argsorted by expert, packed to (E, C) buffers by rank, FFN'd and
+  scattered back. Near-zero dispatch FLOPs (the beyond-paper variant,
+  §Perf iteration 2).
+
+Both drop overflow tokens beyond capacity (standard; the router aux loss
+keeps load balanced) and renormalize top-k gates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import shard_act
+
+
+def _router(x, wg, top_k: int):
+    """-> gates (N, k) fp32 renormalized, experts (N, k) int32, aux loss."""
+    logits = (x.astype(jnp.float32) @ wg.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (N, E)
+    gates, experts = jax.lax.top_k(probs, top_k)                 # (N, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e = wg.shape[1]
+    density = jnp.mean(jax.nn.one_hot(experts[:, 0], e), axis=0)
+    p_mean = probs.mean(axis=0)
+    aux = e * jnp.sum(density * p_mean)
+    return gates, experts, aux
+
+
+def _expert_ffn(xin, params, act: str):
+    """xin: (E, C, d) -> (E, C, d) through per-expert FFN weights."""
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, params["w1"]))
+        h = h * jnp.einsum("ecd,edf->ecf", xin, params["w3"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin, params["w1"]))
+    return jnp.einsum("ecf,efd->ecd", h, params["w2"])
+
+
+def moe_ffn(x, params, *, top_k: int, capacity_factor: float, act: str,
+            impl: str = "einsum", group: int = 512):
+    """x: (B, S, d) -> (B, S, d), aux_loss scalar. params: wg (d,E), w1/w3
+    (E,d,f), w2 (E,f,d)."""
+    b, s, d = x.shape
+    e = params["wg"].shape[1]
+    n = b * s
+    xf = x.reshape(n, d)
+    gates, experts, aux = _router(xf, params["wg"], top_k)
+
+    if impl == "einsum":
+        g = min(group, n)
+        while n % g:  # group size must divide (prod shapes are 2^k)
+            g -= 1
+        ng = n // g
+        cap = max(1, int(g * top_k * capacity_factor / e))
+        xg = xf.reshape(ng, g, d)
+        experts_g = experts.reshape(ng, g, top_k)
+        gates_g = gates.reshape(ng, g, top_k).astype(x.dtype)
+        # rank of each (token, k) slot within its (group, expert) queue
+        onehot = jax.nn.one_hot(experts_g, e, dtype=jnp.int32)        # (G, g, k, E)
+        flat = onehot.reshape(ng, g * top_k, e)
+        rank = (jnp.cumsum(flat, axis=1) - flat).reshape(ng, g, top_k, e)
+        rank = (rank * onehot).sum(-1)                                # (G, g, k)
+        keep = rank < cap
+        disp = jnp.zeros((ng, g, e, cap), x.dtype)
+        comb = jnp.zeros((ng, g, e, cap), x.dtype)
+        for kk in range(top_k):  # avoid the 5D (g, k, E, C) outer product
+            m = (
+                jax.nn.one_hot(experts_g[:, :, kk], e, dtype=x.dtype)[..., None]
+                * jax.nn.one_hot(rank[:, :, kk], cap, dtype=x.dtype)[..., None, :]
+                * keep[:, :, kk, None, None].astype(x.dtype)
+            )
+            disp = disp + m
+            comb = comb + m * gates_g[:, :, kk, None, None]
+        xin = jnp.einsum("gnec,gnd->gecd", disp, xg)                  # (G, E, C, d)
+        # expert dim over "model" (EP when E % tp == 0), capacity slots
+        # over "batch" (data) — never replicated: a (model, None, None)
+        # constraint here cost 15x replicated expert compute on grok
+        # (E=8 < tp=16), see EXPERIMENTS.md §Perf iteration 1b.
+        xin = shard_act(xin.swapaxes(0, 1).reshape(e, ng * cap, d), ("model", "batch", None))
+        hout = shard_act(_expert_ffn(xin, params, act), ("model", "batch", None))
+        hout = hout.reshape(e, ng, cap, d).swapaxes(0, 1)             # (G, E, C, d)
+        out = jnp.einsum("gnec,gecd->gnd", comb, hout).reshape(n, d)
+    else:  # sort-based gather/scatter dispatch
+        cap = max(1, int(n * top_k * capacity_factor / e))
+        flat_e = experts.reshape(-1)                                  # (N*k,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(e))            # (E,)
+        rank_sorted = jnp.arange(n * top_k) - starts[sorted_e]
+        tok_sorted = order // top_k
+        slot = jnp.where(rank_sorted < cap, sorted_e * cap + rank_sorted, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xf[tok_sorted], mode="drop")
+        hout = _expert_ffn(buf[:-1].reshape(e, cap, d), params, act).reshape(e * cap, d)
+        hout = jnp.concatenate([hout, jnp.zeros((1, d), x.dtype)], axis=0)
+        y_sorted = hout[slot]                                         # (N*k, d)
+        inv = jnp.zeros((n * top_k,), jnp.int32).at[order].set(jnp.arange(n * top_k, dtype=jnp.int32))
+        y = y_sorted[inv].reshape(n, top_k, d)
+        out = (y * gates[..., None].astype(x.dtype)).sum(axis=1)
+
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,172 @@
+"""RWKV-6 (Finch) time-mix layer with data-dependent per-channel decay.
+
+TPU adaptation: the chunked GLA-style algorithm. Within a chunk the
+recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+is expanded into an intra-chunk (c x c) attention-like matmul (MXU work)
+plus an inter-chunk state carry. Cumulative log-decays are clamped at
+-20 per chunk so the r*exp(+L) / k*exp(-L) factorization stays inside
+fp32 range (DESIGN.md §5). Sequential depth is L/chunk; decode is O(1)
+on the (B, H, hd, hd) state.
+
+Channel-mix (the RWKV FFN) is a token-shifted squared-ReLU MLP as in the
+paper; both mixes use token-shift lerps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import shard_act
+
+CLAMP = -30.0
+
+
+def init_params(key, cfg, dtype):
+    d = cfg.d_model
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    lora = cfg.rwkv_decay_lora
+    k = jax.random.split(key, 10)
+    lim = lambda fan: 1.0 / jnp.sqrt(fan)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": (jax.random.normal(k[0], (d, d)) * lim(d)).astype(dtype),
+        "w_k": (jax.random.normal(k[1], (d, d)) * lim(d)).astype(dtype),
+        "w_v": (jax.random.normal(k[2], (d, d)) * lim(d)).astype(dtype),
+        "w_g": (jax.random.normal(k[3], (d, d)) * lim(d)).astype(dtype),
+        "w_o": (jax.random.normal(k[4], (d, d)) * lim(d)).astype(dtype),
+        "w_decay0": jnp.full((d,), -1.0, jnp.float32),
+        "w_decay1": (jax.random.normal(k[5], (d, lora)) * lim(d)).astype(dtype),
+        "w_decay2": (jax.random.normal(k[6], (lora, d)) * lim(lora)).astype(dtype),
+        "u_bonus": (jax.random.normal(k[7], (h, hd)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((h, hd), jnp.float32),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros or ``prev`` carry at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _projections(x, xprev, p, cfg):
+    b, l, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    mix = lambda mu: x * mu + xprev * (1 - mu)
+    r = shard_act((mix(p["mu_r"]) @ p["w_r"]).reshape(b, l, h, hd), ("batch", None, "model", None))
+    k = shard_act((mix(p["mu_k"]) @ p["w_k"]).reshape(b, l, h, hd), ("batch", None, "model", None))
+    v = shard_act((mix(p["mu_v"]) @ p["w_v"]).reshape(b, l, h, hd), ("batch", None, "model", None))
+    g = shard_act(jax.nn.silu(mix(p["mu_g"]) @ p["w_g"]), ("batch", None, "model"))
+    xw = mix(p["mu_w"])
+    dec = p["w_decay0"] + (jnp.tanh(xw @ p["w_decay1"]) @ p["w_decay2"]).astype(jnp.float32)
+    logw = -jnp.exp(dec)                   # log decay in (-inf, 0)
+    logw = shard_act(logw.reshape(b, l, h, hd), ("batch", None, "model", None))
+    return r, k, v, g, logw
+
+
+def _group_norm(o, scale, eps=1e-5):
+    """Per-head RMS normalization of the wkv output (B, L, H, hd)."""
+    var = jnp.mean(o * o, axis=-1, keepdims=True)
+    return o * jax.lax.rsqrt(var + eps) * scale
+
+
+def rwkv_seq(x, p, cfg, state=None):
+    """Time-mix over a full sequence. x: (B, L, d) -> (y, (x_last, S_last))."""
+    b, l, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    xprev_carry = None if state is None else state[0]
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32) if state is None else state[1]
+    xprev = _shift(x, xprev_carry)
+    r, k, v, g, logw = _projections(x, xprev, p, cfg)
+
+    cl = min(cfg.ssm_chunk, l)
+    assert l % cl == 0
+    nc = l // cl
+    rc = jnp.moveaxis(r.reshape(b, nc, cl, h, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nc, cl, h, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, cl, h, hd), 1, 0)
+    wc = jnp.moveaxis(logw.reshape(b, nc, cl, h, hd), 1, 0)
+
+    u = p["u_bonus"]
+
+    def chunk(s, inp):
+        rr, kk, vv, ww = (t.astype(jnp.float32) for t in inp)  # (B, cl, H, hd)
+        lcum = jnp.maximum(jnp.cumsum(ww, axis=1), CLAMP)       # L_t (<= 0)
+        lprev = jnp.concatenate([jnp.zeros_like(lcum[:, :1]), lcum[:, :-1]], axis=1)
+        r_tld = rr * jnp.exp(lprev)                             # r_t * e^{L_{t-1}}
+        k_tld = kk * jnp.exp(-lcum)                             # k_s * e^{-L_s}
+        # intra-chunk scores A[t, s] = sum_c r~[t, c] k~[s, c], strict causal
+        scores = jnp.einsum("bthc,bshc->bhts", r_tld, k_tld)
+        tpos = jnp.arange(cl)
+        strict = tpos[:, None] > tpos[None, :]
+        scores = scores * strict[None, None]
+        diag = jnp.einsum("bthc,hc,bthc->bth", rr, u, kk)       # bonus term
+        o = jnp.einsum("bhts,bshc->bthc", scores, vv)
+        o = o + diag[..., None] * vv
+        o = o + jnp.einsum("bthc,bhcd->bthd", r_tld, s)         # inter-chunk
+        # state update: S' = e^{L_c} (.) S + sum_s e^{L_c - L_s} k_s v_s^T
+        lend = lcum[:, -1]                                      # (B, H, hd)
+        s_new = jnp.exp(lend)[..., None] * s + jnp.einsum(
+            "bshc,bshd->bhcd", k_tld * jnp.exp(lend)[:, None], vv
+        )
+        s_new = shard_act(s_new, ("batch", "model", None, None))
+        o = shard_act(o, ("batch", None, "model", None))
+        return s_new, o
+
+    s_last, oc = jax.lax.scan(chunk, s0, (rc, kc, vc, wc))
+    o = jnp.moveaxis(oc, 0, 1).reshape(b, l, h, hd)
+    o = _group_norm(o, p["ln_scale"]).reshape(b, l, d).astype(x.dtype)
+    y = (o * g) @ p["w_o"]
+    return y, (x[:, -1], s_last)
+
+
+def rwkv_decode(x, p, cfg, state):
+    """One token. x: (B, 1, d); state = (x_prev (B, d), S (B, H, hd, hd))."""
+    b, _, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    x_prev, s = state
+    r, k, v, g, logw = _projections(x, x_prev[:, None], p, cfg)
+    rr, kk, vv = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # (B, H, hd)
+    w = jnp.exp(jnp.maximum(logw[:, 0].astype(jnp.float32), CLAMP))
+    u = p["u_bonus"]
+    kv = jnp.einsum("bhc,bhd->bhcd", kk, vv)
+    o = jnp.einsum("bhc,bhcd->bhd", rr, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    o = _group_norm(o[:, None], p["ln_scale"]).reshape(b, 1, d).astype(x.dtype)
+    y = (o * g) @ p["w_o"]
+    return y, (x[:, 0], s_new)
+
+
+def init_state(batch, cfg, dtype):
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    return (
+        jnp.zeros((batch, cfg.d_model), dtype),
+        jnp.zeros((batch, h, hd, hd), jnp.float32),
+    )
+
+
+# ----------------------------------------------------------- channel mix
+
+def init_cmix_params(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k = jax.random.split(key, 2)
+    lim = lambda fan: 1.0 / jnp.sqrt(fan)
+    return {
+        "mu": jnp.full((d,), 0.5, dtype),
+        "wk": (jax.random.normal(k[0], (d, f)) * lim(d)).astype(dtype),
+        "wv": (jax.random.normal(k[1], (f, d)) * lim(f)).astype(dtype),
+    }
+
+
+def cmix_seq(x, p, prev=None):
+    xprev = _shift(x, prev)
+    xm = x * p["mu"] + xprev * (1 - p["mu"])
+    h = jnp.square(jax.nn.relu(xm @ p["wk"]))
+    return h @ p["wv"], x[:, -1]

@@ -1,0 +1,221 @@
+"""Prefill + single-token decode with per-family caches.
+
+Cache layout (pytree, scan-stacked over blocks):
+    cache = {
+      "pos": (B,) int32 — tokens already in cache,
+      "blocks": {"sub<j>": <per-kind state>} stacked over n_blocks,
+      ["xattn": {"k","v"} stacked over decoder layers (whisper)],
+    }
+    attn  state: k/v (B, M, KV, hd)          — M = cache capacity
+    mamba state: conv (B, dc-1, di), h (B, di, ds) fp32
+    rwkv6 state: xt (B, d), s (B, H, hd, hd) fp32, xc (B, d)
+
+``decode_step`` is one ``lax.scan`` over (block params, block cache); the
+"serve_step" lowered by the dry-run for decode_32k / long_500k shapes is
+exactly this function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import shard_act
+
+from . import mamba, rwkv6
+from .config import ModelConfig
+from .layers import apply_rope, attention, decode_attention, ffn, rms_norm
+from .moe import moe_ffn
+from .transformer import (
+    _attn_qkv,
+    _cross_attn,
+    _dtype,
+    _encoder_forward,
+    _sin_pos,
+    embed_inputs,
+)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    """Empty cache pytree (used directly by the decode dry-run)."""
+    dt = _dtype(cfg)
+    period = cfg.block_period
+    n_blocks = cfg.n_layers // period
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def sub_state(j):
+        kind = cfg.layer_kind(j)
+        if kind == "attn":
+            return {
+                "k": jnp.zeros((batch_size, max_len, kv, hd), dt),
+                "v": jnp.zeros((batch_size, max_len, kv, hd), dt),
+            }
+        if kind == "mamba":
+            return {
+                "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1, cfg.d_inner), dt),
+                "h": jnp.zeros((batch_size, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            }
+        return {
+            "xt": jnp.zeros((batch_size, cfg.d_model), dt),
+            "s": jnp.zeros((batch_size, cfg.n_rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            "xc": jnp.zeros((batch_size, cfg.d_model), dt),
+        }
+
+    blocks = {
+        f"sub{j}": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_blocks, *a.shape)), sub_state(j)
+        )
+        for j in range(period)
+    }
+    cache = {"pos": jnp.zeros((batch_size,), jnp.int32), "blocks": blocks}
+    if cfg.n_enc_layers:
+        cache["xattn"] = {
+            "k": jnp.zeros((cfg.n_layers, batch_size, cfg.n_frames, kv, hd), dt),
+            "v": jnp.zeros((cfg.n_layers, batch_size, cfg.n_frames, kv, hd), dt),
+        }
+    return cache
+
+
+# ------------------------------------------------------------------ prefill
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Run the prompt, return (last-position logits (B, Vpad), cache)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    memory = _encoder_forward(params, cfg, batch["frames"]) if cfg.n_enc_layers else None
+    period = cfg.block_period
+
+    def block(x, scanned):
+        bp = scanned["block"]
+        x = shard_act(x, ("batch", None, None))
+        caches = {}
+        for j in range(period):
+            p = bp[f"sub{j}"]
+            kind = cfg.layer_kind(j)
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            if kind == "attn":
+                q, k, v = _attn_qkv(h, p["attn"], cfg, positions)
+                o = attention(q, k, v, causal=True, q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k)
+                x = x + o.reshape(b, s, -1) @ p["attn"]["wo"]
+                kc = jnp.zeros((b, max_len, *k.shape[2:]), k.dtype)
+                caches[f"sub{j}"] = {
+                    "k": jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(kc, v, (0, 0, 0, 0)),
+                }
+            elif kind == "mamba":
+                y, (conv, hst) = mamba.mamba_seq(h, p["mamba"], cfg)
+                x = x + y
+                caches[f"sub{j}"] = {"conv": conv, "h": hst}
+            else:
+                y, (xt, sst) = rwkv6.rwkv_seq(h, p["tmix"], cfg)
+                x = x + y
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "cmix" in p:
+                y, xc = rwkv6.cmix_seq(h2, p["cmix"])
+                x = x + y
+                caches[f"sub{j}"] = {"xt": xt, "s": sst, "xc": xc}
+            elif "moe" in p:
+                y, _ = moe_ffn(h2, p["moe"], top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                               act=cfg.ffn_act, impl=cfg.moe_impl)
+                x = x + y
+            else:
+                x = x + ffn(h2, p["ffn"], cfg.ffn_act)
+        if memory is not None:
+            xp = scanned["xattn"]
+            h = rms_norm(x, xp["lnx"], cfg.norm_eps)
+            x = x + _cross_attn(h, xp["xattn"], cfg, memory)
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            caches["xk"] = (memory @ xp["xattn"]["wk"]).reshape(b, -1, kv, hd)
+            caches["xv"] = (memory @ xp["xattn"]["wv"]).reshape(b, -1, kv, hd)
+        return x, caches
+
+    scanned = {"block": params["blocks"]}
+    if memory is not None:
+        scanned["xattn"] = params["xattn"]
+    blk = jax.checkpoint(block, prevent_cse=False) if cfg.remat else block
+    x, caches = jax.lax.scan(blk, x, scanned)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x[:, -1] @ unembed
+
+    cache = {"pos": jnp.full((b,), s, jnp.int32),
+             "blocks": {k: v for k, v in caches.items() if k.startswith("sub")}}
+    if memory is not None:
+        cache["xattn"] = {"k": caches["xk"], "v": caches["xv"]}
+    return logits, cache
+
+
+# ------------------------------------------------------------- decode step
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens):
+    """One token for every sequence. tokens: (B, 1) -> (logits, new cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]                       # (B,)
+    x = params["embed"][tokens]              # (B, 1, d)
+    if cfg.family == "audio":
+        m = cache["blocks"]["sub0"]["k"].shape[2] if "k" in cache["blocks"]["sub0"] else 4096
+        x = x + _sin_pos(m, cfg.d_model).astype(x.dtype)[pos][:, None]
+    positions = pos[:, None]
+    period = cfg.block_period
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def block(x, scanned):
+        bp = scanned["block"]
+        bc = scanned["cache"]
+        x = shard_act(x, ("batch", None, None))
+        new_cache = {}
+        for j in range(period):
+            p = bp[f"sub{j}"]
+            c = bc[f"sub{j}"]
+            kind = cfg.layer_kind(j)
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            if kind == "attn":
+                q, k, v = _attn_qkv(h, p["attn"], cfg, positions)
+                kc = jax.lax.dynamic_update_slice(c["k"], k, (0, pos[0], 0, 0))
+                vc = jax.lax.dynamic_update_slice(c["v"], v, (0, pos[0], 0, 0))
+                o = decode_attention(q, kc, vc, pos + 1)
+                x = x + o.reshape(b, 1, -1) @ p["attn"]["wo"]
+                new_cache[f"sub{j}"] = {"k": kc, "v": vc}
+            elif kind == "mamba":
+                y, (conv, hst) = mamba.mamba_decode(h, p["mamba"], cfg, (c["conv"], c["h"]))
+                x = x + y
+                new_cache[f"sub{j}"] = {"conv": conv, "h": hst}
+            else:
+                y, (xt, sst) = rwkv6.rwkv_decode(h, p["tmix"], cfg, (c["xt"], c["s"]))
+                x = x + y
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "cmix" in p:
+                xm = h2[:, 0] * p["cmix"]["mu"] + c["xc"] * (1 - p["cmix"]["mu"])
+                y = jnp.square(jax.nn.relu(xm @ p["cmix"]["wk"])) @ p["cmix"]["wv"]
+                x = x + y[:, None]
+                new_cache[f"sub{j}"] = {"xt": xt, "s": sst, "xc": h2[:, 0]}
+            elif "moe" in p:
+                y, _ = moe_ffn(h2, p["moe"], top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                               act=cfg.ffn_act, impl=cfg.moe_impl)
+                x = x + y
+            else:
+                x = x + ffn(h2, p["ffn"], cfg.ffn_act)
+        if "xattn" in scanned:
+            xp = scanned["xattn"]
+            xc = scanned["xcache"]
+            h = rms_norm(x, xp["lnx"], cfg.norm_eps)
+            q = (h @ xp["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+            o = decode_attention(q, xc["k"], xc["v"],
+                                 jnp.full((b,), xc["k"].shape[1], jnp.int32))
+            x = x + o.reshape(b, 1, -1) @ xp["xattn"]["wo"]
+        return x, new_cache
+
+    scanned = {"block": params["blocks"], "cache": cache["blocks"]}
+    if "xattn" in cache:
+        scanned["xattn"] = params["xattn"]
+        scanned["xcache"] = cache["xattn"]
+    x, new_blocks = jax.lax.scan(block, x, scanned)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x[:, -1] @ unembed
+    new_cache = {"pos": pos + 1, "blocks": new_blocks}
+    if "xattn" in cache:
+        new_cache["xattn"] = cache["xattn"]
+    return logits, new_cache

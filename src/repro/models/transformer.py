@@ -1,0 +1,379 @@
+"""Unified model: decoder LMs (dense/GQA/MoE), Mamba+attn hybrids, RWKV6,
+encoder-decoder (Whisper) and VLM backbones — one param tree, one scan.
+
+Layers are grouped into repeating *blocks* of ``cfg.block_period``
+sub-layers; block params are stacked on a leading dim and the decoder is
+one ``lax.scan`` over blocks (HLO size and AOT compile time independent
+of depth; remat per block). Heterogeneous patterns (Jamba's 1-attn-per-8
+with MoE every 2nd layer) live inside the block body as a python loop.
+
+TP head padding: ``tp_pad`` rounds (q, kv) head counts up to a multiple
+of the mesh ``model`` axis when needed (MaxText-style vocab padding,
+applied to heads; the overhead is visible and accounted in §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.act_shard import shard_act
+
+from . import mamba, rwkv6
+from .config import ModelConfig
+from .layers import apply_rope, attention, decode_attention, ffn, rms_norm
+from .moe import moe_ffn
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def tp_pad(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Round head counts up to shard on a ``tp``-way model axis."""
+    def up(x):
+        return -(-x // tp) * tp
+
+    h = cfg.n_heads if cfg.n_heads % tp == 0 else up(cfg.n_heads)
+    kv = cfg.n_kv_heads
+    if h != cfg.n_heads and cfg.n_kv_heads == cfg.n_heads:
+        kv = h  # MHA stays MHA
+    if h == cfg.n_heads and kv == cfg.n_kv_heads:
+        return cfg
+    return dataclasses.replace(cfg, n_heads=h, n_kv_heads=kv, head_dim=cfg.head_dim)
+
+
+# ------------------------------------------------------------------- init
+
+def _init_linear(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def _init_attn(key, cfg, dtype, cross=False):
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init_linear(ks[0], (d, h * hd), dtype),
+        "wk": _init_linear(ks[1], (d, kv * hd), dtype),
+        "wv": _init_linear(ks[2], (d, kv * hd), dtype),
+        "wo": _init_linear(ks[3], (h * hd, d), dtype, scale=(h * hd) ** -0.5 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _init_ffn(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_act == "swiglu":
+        return {
+            "w1": _init_linear(ks[0], (d, f), dtype),
+            "w3": _init_linear(ks[1], (d, f), dtype),
+            "w2": _init_linear(ks[2], (f, d), dtype, scale=f ** -0.5 / np.sqrt(2 * cfg.n_layers)),
+        }
+    return {
+        "w1": _init_linear(ks[0], (d, f), dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": _init_linear(ks[1], (f, d), dtype, scale=f ** -0.5 / np.sqrt(2 * cfg.n_layers)),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def _init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "wg": _init_linear(ks[0], (d, e), jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[2], (e, f, d)) * f ** -0.5 / np.sqrt(2 * cfg.n_layers)).astype(dtype),
+    }
+    if cfg.ffn_act == "swiglu":
+        p["w3"] = (jax.random.normal(ks[3], (e, d, f)) * d ** -0.5).astype(dtype)
+    return p
+
+
+def _init_sublayer(key, cfg, i: int, dtype):
+    """One decoder sub-layer (kind depends on layer index within pattern)."""
+    kind = cfg.layer_kind(i)
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind == "attn":
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = mamba.init_params(ks[0], cfg, dtype)
+    else:  # rwkv6
+        p["tmix"] = rwkv6.init_params(ks[0], cfg, dtype)
+    if kind == "rwkv6":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["cmix"] = rwkv6.init_cmix_params(ks[1], cfg, dtype)
+    else:
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.layer_is_moe(i):
+            p["moe"] = _init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = _init_ffn(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    period = cfg.block_period
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    n_blocks = cfg.n_layers // period
+    k_embed, k_blocks, k_enc, k_out = jax.random.split(key, 4)
+
+    params: dict = {
+        "embed": _init_linear(k_embed, (cfg.padded_vocab, cfg.d_model), dtype, scale=0.02),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init_linear(k_out, (cfg.d_model, cfg.padded_vocab), dtype)
+
+    def block_init(key):
+        ks = jax.random.split(key, period)
+        return {f"sub{j}": _init_sublayer(ks[j], cfg, j, dtype) for j in range(period)}
+
+    if cfg.scan_layers:
+        params["blocks"] = jax.vmap(block_init)(jax.random.split(k_blocks, n_blocks))
+    else:
+        bs = [block_init(k) for k in jax.random.split(k_blocks, n_blocks)]
+        params["blocks"] = bs
+
+    if cfg.n_enc_layers:  # whisper-style encoder (+ cross-attn in decoder)
+        kse, ksx = jax.random.split(k_enc)
+
+        def enc_init(key):
+            ks = jax.random.split(key, 2)
+            return {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "attn": _init_attn(ks[0], cfg, dtype),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "ffn": _init_ffn(ks[1], cfg, dtype),
+            }
+
+        params["encoder"] = jax.vmap(enc_init)(jax.random.split(kse, cfg.n_enc_layers))
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), jnp.float32)
+
+        def xattn_init(key):
+            return {"lnx": jnp.ones((cfg.d_model,), jnp.float32), "xattn": _init_attn(key, cfg, dtype, cross=True)}
+
+        n_dec = cfg.n_layers
+        params["xattn"] = jax.vmap(xattn_init)(jax.random.split(ksx, n_dec))
+    return params
+
+
+# --------------------------------------------------------------- sublayers
+
+def _attn_qkv(x, p, cfg, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + p.get("bq", 0)
+    k = x @ p["wk"] + p.get("bk", 0)
+    v = x @ p["wv"] + p.get("bv", 0)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.family != "audio":  # whisper uses absolute positions, no rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, ("batch", None, "model", None))
+    k = shard_act(k, ("batch", None, "model", None))
+    v = shard_act(v, ("batch", None, "model", None))
+    return q, k, v
+
+
+def _self_attn_seq(x, p, cfg, positions, causal=True):
+    q, k, v = _attn_qkv(x, p, cfg, positions)
+    o = attention(q, k, v, causal=causal, q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k)
+    return o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+
+
+def _sublayer_seq(x, p, cfg, j, positions, aux):
+    kind = cfg.layer_kind(j)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        x = x + _self_attn_seq(h, p["attn"], cfg, positions)
+    elif kind == "mamba":
+        y, _ = mamba.mamba_seq(h, p["mamba"], cfg)
+        x = x + y
+    else:
+        y, _ = rwkv6.rwkv_seq(h, p["tmix"], cfg)
+        x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "cmix" in p:
+        y, _ = rwkv6.cmix_seq(h2, p["cmix"])
+        x = x + y
+    elif "moe" in p:
+        y, a = moe_ffn(h2, p["moe"], top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                       act=cfg.ffn_act, impl=cfg.moe_impl)
+        aux = aux + a
+        x = x + y
+    else:
+        x = x + ffn(h2, p["ffn"], cfg.ffn_act)
+    return x, aux
+
+
+# -------------------------------------------------------------- embeddings
+
+def _sin_pos(n, d):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """tokens (+ modality stubs) -> (x (B, S, d), positions (B, S))."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if cfg.n_patches and "vision" in batch:
+        x = jnp.concatenate([batch["vision"].astype(x.dtype), x], axis=1)
+    if cfg.family == "audio":
+        x = x + _sin_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    return x, positions
+
+
+def _encoder_forward(params, cfg, frames):
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    x = frames.astype(_dtype(cfg)) + _sin_pos(frames.shape[1], cfg.d_model).astype(_dtype(cfg))[None]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + _self_attn_seq(h, p["attn"], cfg, positions, causal=False)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + ffn(h, p["ffn"], cfg.ffn_act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def _cross_attn(x, p, cfg, memory):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (memory @ p["wk"]).reshape(b, memory.shape[1], kv, hd)
+    v = (memory @ p["wv"]).reshape(b, memory.shape[1], kv, hd)
+    o = attention(q, k, v, causal=False, q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------- forward
+
+def forward(params, cfg: ModelConfig, batch: dict, return_hidden: bool = False):
+    """Training/eval forward -> logits (B, S, padded_vocab), aux loss.
+    ``return_hidden`` skips the unembedding (vocab-chunked loss path)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    x = shard_act(x, ("batch", None, None))
+    memory = _encoder_forward(params, cfg, batch["frames"]) if cfg.n_enc_layers else None
+    period = cfg.block_period
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def block(carry, scanned):
+        x, aux = carry
+        bp = scanned["block"]
+        x = shard_act(x, ("batch", None, None))
+        for j in range(period):
+            x, aux = _sublayer_seq(x, bp[f"sub{j}"], cfg, j, positions, aux)
+            x = shard_act(x, ("batch", None, None))
+        if memory is not None:
+            xp = scanned["xattn"]
+            h = rms_norm(x, xp["lnx"], cfg.norm_eps)
+            x = x + _cross_attn(h, xp["xattn"], cfg, memory)
+        return (x, aux), None
+
+    if cfg.scan_layers:
+        scanned = {"block": params["blocks"]}
+        if memory is not None:
+            nb = cfg.n_layers // period
+            scanned["xattn"] = jax.tree.map(
+                lambda a: a.reshape(nb, period, *a.shape[1:])[:, -1], params["xattn"]
+            ) if period > 1 else params["xattn"]
+        blk = block
+        if cfg.remat:
+            blk = jax.checkpoint(block, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(blk, (x, aux0), scanned)
+    else:
+        aux = aux0
+        for i, bp in enumerate(params["blocks"]):
+            (x, aux), _ = block((x, aux), {"block": bp})
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    # gather the FSDP-sharded d dim of the unembedding once (cheap weight
+    # all-gather) instead of letting XLA psum the (B,S,V) activations
+    unembed = shard_act(unembed, (None, "model"))
+    logits = shard_act(x @ unembed, ("batch", None, "model"))
+    return logits, aux
+
+
+def _chunked_lse_ll(x, unembed, labels, chunk: int):
+    """(logsumexp, label-logit) over vocab chunks — the (B, S, V) logits
+    tensor is never materialized (only (B, S, chunk) tiles). Streaming
+    max/sumexp is exact; gradients flow through the scan."""
+    v = unembed.shape[1]
+    chunk = min(chunk, v)
+    while v % chunk:
+        chunk -= 1
+    nc = v // chunk
+    w = jnp.moveaxis(unembed.reshape(unembed.shape[0], nc, chunk), 1, 0)  # (nc, d, c)
+    lab = jnp.maximum(labels, 0)
+
+    def step(carry, inp):
+        m, se, ll = carry
+        ci, wc = inp
+        lg = (x @ wc).astype(jnp.float32)                       # (B, S, c)
+        m_new = jnp.maximum(m, lg.max(-1))
+        se = se * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        local = lab - ci * chunk
+        inside = (local >= 0) & (local < chunk)
+        pick = jnp.take_along_axis(lg, jnp.clip(local, 0, chunk - 1)[..., None], axis=-1)[..., 0]
+        ll = jnp.where(inside, pick, ll)
+        return (m_new, se, ll), None
+
+    m0 = jnp.full(x.shape[:-1], -1e30, jnp.float32)
+    se0 = jnp.zeros(x.shape[:-1], jnp.float32)
+    ll0 = jnp.zeros(x.shape[:-1], jnp.float32)
+    (m, se, ll), _ = jax.lax.scan(step, (m0, se0, ll0), (jnp.arange(nc), w))
+    return m + jnp.log(jnp.maximum(se, 1e-30)), ll
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    """Next-token xent (fp32, z-loss) with label masking (-1 = ignore)."""
+    labels = batch["labels"]
+    if cfg.n_patches and "vision" in batch:  # vision prefix carries no labels
+        pad = jnp.full(labels.shape[:1] + (cfg.n_patches,), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    if cfg.vocab_chunk:
+        x, aux = forward(params, cfg, batch, return_hidden=True)
+        unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        lse, ll = _chunked_lse_ll(x, unembed, labels, cfg.vocab_chunk)
+    else:
+        logits, aux = forward(params, cfg, batch)
+        logits32 = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits32, axis=-1)
+        ll = jnp.take_along_axis(logits32, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    zloss = 1e-4 * ((lse * mask) ** 2).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + zloss + 1e-2 * aux, {"nll": nll, "aux": aux}

@@ -1,0 +1,4 @@
+"""Sharded optimizer stack: AdamW, cosine schedule, global-norm clipping,
+int8 error-feedback gradient compression for the cross-pod hop."""
+
+from .adamw import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule

@@ -1,0 +1,63 @@
+"""int8 error-feedback gradient compression for the cross-pod (DCN) hop.
+
+At 512+ chips the pod-crossing all-reduce runs over DCN links that are
+~10x slower than ICI; quantizing the summand to int8 with per-tensor
+scales cuts that traffic 4x (vs bf16). Error feedback (Seide et al.,
+1-bit SGD; Karimireddy et al. 2019) keeps the quantization noise from
+accumulating: the residual e is added back before the next quantization,
+making compressed SGD converge like the uncompressed baseline.
+
+Used by the explicit shard_map training step (``train.steps.
+make_train_step_explicit``): gradients are psum'd over ("data",) in full
+precision (fast ICI), then the pod hop is int8:
+
+    q, e' = quantize(g/pods + e);  g' = psum_int32(q, "pod") * scale
+
+Unit-tested on a small host mesh; the dry-run proves it lowers on the
+production multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, err):
+    """-> (q int8, scale f32, new_err). err is the running residual."""
+    x32 = x.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, x32 - deq
+
+
+def allreduce_int8(grads, err_state, axis: str):
+    """Error-feedback int8 all-reduce of a grad pytree over ``axis``.
+
+    Inside shard_map only. Returns (mean-reduced grads fp32, new errors).
+    int8 summands are accumulated in int32 (no overflow below 2^23 pods),
+    scales are psum'd max-style per tensor.
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e):
+        x32 = g.astype(jnp.float32) / n + e
+        # shared scale (pmax) so all ranks quantize on the same grid
+        scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12), axis) / 127.0
+        q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        new_e = x32 - q.astype(jnp.float32) * scale  # residual feedback
+        return total.astype(jnp.float32) * scale, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        jax.tree.unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+def init_error_state(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

@@ -1,0 +1,3 @@
+"""Training/serving step functions (GSPMD + explicit-collective variants)."""
+
+from .steps import make_decode_step, make_prefill_step, make_train_step

@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — unit/smoke tests
+must see the real single CPU device; multi-device behaviour is tested via
+subprocesses (test_multidevice.py) so the device count is per-process."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def spark_lines():
+    from repro.data.loggen import generate_lines
+
+    return list(generate_lines("Spark", 2500, seed=7))
+
+
+@pytest.fixture(scope="session")
+def hdfs_lines():
+    from repro.data.loggen import generate_lines
+
+    return list(generate_lines("HDFS", 2500, seed=11))

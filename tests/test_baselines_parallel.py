@@ -1,0 +1,54 @@
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    cowic_like,
+    cowic_like_decompress,
+    kernel_baseline,
+    kernel_baseline_decompress,
+    logarchive_like,
+    logarchive_like_decompress,
+)
+from repro.core.codec import LogzipConfig
+from repro.core.ise import ISEConfig
+from repro.core.parallel import compress_parallel, decompress_parallel
+from repro.data.loggen import DATASETS
+
+CFG = LogzipConfig(level=3, format=DATASETS["Spark"]["format"], ise=ISEConfig(min_sample=100))
+
+
+def test_kernel_baseline_roundtrip(spark_lines):
+    for k in ("gzip", "bzip2", "lzma"):
+        blob = kernel_baseline(spark_lines, k)
+        assert kernel_baseline_decompress(blob, k) == spark_lines
+
+
+def test_logarchive_like_roundtrip(spark_lines):
+    blob = logarchive_like(spark_lines[:600])
+    assert logarchive_like_decompress(blob) == spark_lines[:600]
+
+
+def test_cowic_like_roundtrip(spark_lines):
+    blob = cowic_like(spark_lines[:600])
+    assert cowic_like_decompress(blob) == spark_lines[:600]
+
+
+@pytest.mark.parametrize("workers,chunk", [(1, None), (2, 300), (4, 150)])
+def test_parallel_roundtrip(workers, chunk, spark_lines):
+    lines = spark_lines[:900]
+    blob = compress_parallel(lines, CFG, n_workers=workers, chunk_lines=chunk)
+    assert decompress_parallel(blob, n_workers=workers) == lines
+
+
+def test_parallel_empty():
+    blob = compress_parallel([], CFG, n_workers=2)
+    assert decompress_parallel(blob) == []
+
+
+def test_chunking_costs_a_little(spark_lines):
+    """paper Fig 7: chunked compression is slightly larger (no cross-chunk
+    template sharing)."""
+    lines = spark_lines[:2000]
+    whole = len(compress_parallel(lines, CFG, n_workers=1, chunk_lines=len(lines)))
+    chunked = len(compress_parallel(lines, CFG, n_workers=1, chunk_lines=250))
+    assert chunked >= whole * 0.9  # never dramatically smaller

@@ -1,0 +1,151 @@
+"""Losslessness is THE contract: decompress(compress(x)) == x, always."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.codec import LogzipConfig, compress, decompress, read_structured
+from repro.core.encode import (
+    ColumnCodec,
+    decode_varints,
+    encode_varints,
+    esc,
+    join_column,
+    split_column,
+    unesc,
+)
+from repro.core.ise import ISEConfig
+from repro.data.loggen import DATASETS
+
+CFG_FAST = ISEConfig(min_sample=150, max_iters=3)
+
+line_text = st.text(alphabet=st.characters(blacklist_categories=("Cs",)), max_size=80).filter(
+    lambda s: "\n" not in s
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 2**40), max_size=50))
+def test_varint_roundtrip(xs):
+    assert decode_varints(encode_varints(xs)) == xs
+
+
+@settings(max_examples=200, deadline=None)
+@given(line_text)
+def test_esc_roundtrip(s):
+    assert unesc(esc(s)) == s
+    assert "\n" not in esc(s)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(line_text, max_size=20))
+def test_column_roundtrip(vals):
+    assert split_column(join_column(vals)) == vals
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(line_text, max_size=25))
+def test_column_codec_roundtrip(vals):
+    objs = ColumnCodec("c").encode(vals)
+    assert ColumnCodec("c").decode(objs, len(vals)) == vals
+
+
+@pytest.mark.parametrize("level", [1, 2, 3])
+@pytest.mark.parametrize("kernel", ["gzip", "bzip2", "lzma", "none"])
+def test_roundtrip_levels_kernels(level, kernel, spark_lines):
+    lines = spark_lines[:800]
+    cfg = LogzipConfig(level=level, kernel=kernel, format=DATASETS["Spark"]["format"], ise=CFG_FAST)
+    assert decompress(compress(lines, cfg)) == lines
+
+
+def test_roundtrip_no_format(spark_lines):
+    cfg = LogzipConfig(level=3, format=None, ise=CFG_FAST)
+    lines = spark_lines[:500]
+    assert decompress(compress(lines, cfg)) == lines
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(line_text, max_size=40))
+def test_roundtrip_arbitrary_lines(lines):
+    """ANY text survives, format mismatches and all."""
+    cfg = LogzipConfig(level=3, format="<Date> <Time> <Level> <Component>: <Content>",
+                       ise=ISEConfig(min_sample=20, max_iters=2))
+    assert decompress(compress(lines, cfg)) == lines
+
+
+def test_roundtrip_adversarial():
+    lines = ["", "*", "* * *", "a\\nb", "x" * 5000, "\t \t", ",,,,", "<Date> weird",
+             "17/06/09 20:10:46 INFO a.b: ok", "\x02\x00 control", "日志 unicode ログ"]
+    cfg = LogzipConfig(level=3, format="<Date> <Time> <Level> <Component>: <Content>",
+                       ise=ISEConfig(min_sample=5))
+    assert decompress(compress(lines, cfg)) == lines
+
+
+def test_compression_beats_gzip_on_logs(hdfs_lines):
+    """The paper's core claim, scaled down: logzip(gzip) < gzip on logs."""
+    import zlib
+
+    lines = hdfs_lines
+    raw = "\n".join(lines).encode()
+    cfg = LogzipConfig(level=3, kernel="gzip", format=DATASETS["HDFS"]["format"], ise=CFG_FAST)
+    blob = compress(lines, cfg)
+    assert len(blob) < len(zlib.compress(raw, 6))
+
+
+def test_structured_access(spark_lines):
+    cfg = LogzipConfig(level=3, format=DATASETS["Spark"]["format"], ise=CFG_FAST)
+    blob = compress(spark_lines[:800], cfg)
+    s = read_structured(blob)
+    assert s["meta"]["n"] == 800
+    assert len(s["templates"]) >= 3
+    assert s["events"].max() < len(s["templates"])
+    assert s["match_rate"] > 0.9
+
+
+def test_template_store_reuse(spark_lines):
+    """paper §III-E: one-off ISE, then match-only compression of new logs
+    with STABLE EventIDs across archives."""
+    from repro.core.templates import TemplateStore, extract_templates
+    from repro.data.loggen import generate_lines
+
+    fmt = DATASETS["Spark"]["format"]
+    store = extract_templates(spark_lines, fmt, ISEConfig(min_sample=300))
+    assert len(store) >= 3
+
+    new_lines = list(generate_lines("Spark", 1500, seed=99))
+    cfg = LogzipConfig(level=3, format=fmt, template_store=store)
+    blob = compress(new_lines, cfg)
+    assert decompress(blob) == new_lines  # lossless with external templates
+    s = read_structured(blob)
+    assert s["meta"].get("template_store") is True
+    assert s["match_rate"] > 0.85
+    # EventIDs index into the SHARED store ordering: the decoded template
+    # strings must be a subset of the store's
+    assert set(s["templates"]) <= set(store.as_strings())
+
+
+def test_template_store_save_load(tmp_path, spark_lines):
+    from repro.core.templates import TemplateStore, extract_templates
+
+    store = extract_templates(spark_lines[:800], DATASETS["Spark"]["format"],
+                              ISEConfig(min_sample=200))
+    p = str(tmp_path / "templates.json")
+    store.save(p)
+    back = TemplateStore.load(p)
+    assert back.templates == store.templates
+
+
+def test_template_store_eventids_stable(spark_lines):
+    """Two different corpora compressed with the same store must agree on
+    the EventID of every shared template (cross-archive stability)."""
+    from repro.core.templates import extract_templates
+    from repro.data.loggen import generate_lines
+
+    fmt = DATASETS["Spark"]["format"]
+    store = extract_templates(spark_lines, fmt, ISEConfig(min_sample=300))
+    cfg = LogzipConfig(level=2, format=fmt, template_store=store)
+    s1 = read_structured(compress(list(generate_lines("Spark", 800, seed=5)), cfg))
+    s2 = read_structured(compress(list(generate_lines("Spark", 800, seed=6)), cfg))
+    # same id -> same template string in both archives
+    assert s1["templates"] == s2["templates"] == store.as_strings()

@@ -1,0 +1,84 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.match import match_first
+from repro.kernels import ops
+from repro.kernels.ref import simcount_ref, wildcard_match_ref
+
+
+def _rand_case(rng, n, t, k, tt, star_rate=0.25):
+    logs = rng.integers(2, 24, (n, t)).astype(np.int32)
+    lens = rng.integers(0, t + 1, (n,)).astype(np.int32)
+    for r in range(n):
+        logs[r, lens[r]:] = 0
+    tmpl = rng.integers(2, 24, (k, tt)).astype(np.int32)
+    stars = rng.random((k, tt)) < star_rate
+    tmpl[stars] = 1
+    tlens = rng.integers(1, tt + 1, (k,)).astype(np.int32)
+    for r in range(k):
+        tmpl[r, tlens[r]:] = 0
+    return logs, lens, tmpl, tlens
+
+
+@pytest.mark.parametrize("n,t,k,tt", [(7, 5, 3, 4), (64, 16, 9, 8), (300, 33, 17, 12), (257, 128, 129, 64)])
+def test_simcount_matches_ref(n, t, k, tt):
+    rng = np.random.default_rng(n)
+    logs, lens, tmpl, tlens = _rand_case(rng, n, t, k, tt)
+    got = np.asarray(ops.simcount(logs, tmpl))
+    want = np.asarray(simcount_ref(jnp.asarray(logs), jnp.asarray(tmpl)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,t,k,tt", [(5, 6, 2, 4), (70, 12, 10, 6), (260, 24, 20, 10)])
+def test_wildcard_match_matches_ref(n, t, k, tt):
+    rng = np.random.default_rng(n * 7)
+    logs, lens, tmpl, tlens = _rand_case(rng, n, t, k, tt)
+    # plant guaranteed matches: log = template with stars -> 1-2 tokens
+    for r in range(min(n, k)):
+        row = []
+        for j in range(tlens[r]):
+            if tmpl[r, j] == 1:
+                row.extend([int(rng.integers(2, 24))] * int(rng.integers(1, 3)))
+            else:
+                row.append(int(tmpl[r, j]))
+        row = row[:t]
+        logs[r, :] = 0
+        logs[r, : len(row)] = row
+        lens[r] = len(row)
+    got = np.asarray(ops.wildcard_match(logs, lens, tmpl, tlens))
+    want = np.asarray(
+        wildcard_match_ref(jnp.asarray(logs), jnp.asarray(lens), jnp.asarray(tmpl), jnp.asarray(tlens))
+    )
+    np.testing.assert_array_equal(got, want)
+    assert got.any(), "planted matches must register"
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 20), st.integers(1, 12), st.integers(1, 10), st.integers(0, 2**31 - 1))
+def test_wildcard_match_property(n, t, k, tt, seed):
+    rng = np.random.default_rng(seed)
+    logs, lens, tmpl, tlens = _rand_case(rng, n, t, k, tt, star_rate=0.4)
+    got = np.asarray(ops.wildcard_match(logs, lens, tmpl, tlens))
+    want = np.asarray(
+        wildcard_match_ref(jnp.asarray(logs), jnp.asarray(lens), jnp.asarray(tmpl), jnp.asarray(tlens))
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_agrees_with_core_matcher():
+    rng = np.random.default_rng(3)
+    logs, lens, tmpl, tlens = _rand_case(rng, 120, 16, 7, 8)
+    templates = [tmpl[i, : tlens[i]].copy() for i in range(len(tlens))]
+    a_np = match_first(logs, lens, templates, use_kernel=False)
+    a_k = match_first(logs, lens, templates, use_kernel=True)
+    np.testing.assert_array_equal(a_np, a_k)
+
+
+def test_pack_templates_empty():
+    m, l = ops.pack_templates([])
+    assert m.shape[0] == 0 and l.shape == (0,)

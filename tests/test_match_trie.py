@@ -1,0 +1,81 @@
+"""DP matcher == trie (existence semantics), span validity, kernels."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.match import extract_spans, match_first, match_one_template
+from repro.core.tokenizer import STAR_ID
+from repro.core.trie import PrefixTree
+
+token = st.integers(2, 8)  # tiny alphabet -> frequent collisions
+template_s = st.lists(st.one_of(token, st.just(STAR_ID)), min_size=1, max_size=6)
+log_s = st.lists(token, min_size=0, max_size=10)
+
+
+def _pack(logs, t=12):
+    ids = np.zeros((len(logs), t), np.int32)
+    lens = np.zeros(len(logs), np.int32)
+    for r, row in enumerate(logs):
+        ids[r, : len(row)] = row
+        lens[r] = len(row)
+    return ids, lens
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.lists(template_s, min_size=1, max_size=5), st.lists(log_s, min_size=1, max_size=8))
+def test_trie_equals_dp(templates, logs):
+    templates = [np.array(t, np.int32) for t in templates]
+    ids, lens = _pack(logs)
+    assign = match_first(ids, lens, templates)
+    tree = PrefixTree()
+    for i, t in enumerate(templates):
+        tree.insert(t, i)
+    tids, spans = tree.match_batch(ids, lens)
+    # existence must agree exactly (which template may differ on ties)
+    np.testing.assert_array_equal(assign >= 0, tids >= 0)
+    # any assignment returned must actually match
+    for r in range(len(logs)):
+        if assign[r] >= 0:
+            assert match_one_template(ids[r : r + 1], lens[r : r + 1], templates[assign[r]])[0]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(log_s, min_size=1, max_size=6), template_s)
+def test_spans_reconstruct(logs, template):
+    """Splicing span tokens into the template must reproduce the log."""
+    template = np.array(template, np.int32)
+    ids, lens = _pack(logs)
+    ok = match_one_template(ids, lens, template)
+    sel = np.nonzero(ok)[0]
+    if len(sel) == 0:
+        return
+    spans = extract_spans(ids[sel], lens[sel], template)
+    for i, r in enumerate(sel):
+        out = []
+        si = 0
+        for t in template:
+            if int(t) == STAR_ID:
+                s, e = spans[i, si]
+                assert e > s, "star must absorb >= 1 token"
+                out.extend(ids[r, s:e].tolist())
+                si += 1
+            else:
+                out.append(int(t))
+        assert out == ids[r, : lens[r]].tolist()
+
+
+def test_star_absorbs_multiple():
+    # paper example: "Delete block: *" matches "Delete block: blk-231, blk-12"
+    tpl = np.array([5, 6, STAR_ID], np.int32)
+    ids, lens = _pack([[5, 6, 7, 8, 9]])
+    assert match_one_template(ids, lens, tpl)[0]
+    sp = extract_spans(ids, lens, tpl)
+    assert (sp[0, 0] == [2, 5]).all()
+
+
+def test_star_requires_one_token():
+    tpl = np.array([5, STAR_ID, 6], np.int32)
+    ids, lens = _pack([[5, 6]])
+    assert not match_one_template(ids, lens, tpl)[0]

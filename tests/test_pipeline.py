@@ -1,0 +1,84 @@
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.codec import LogzipConfig
+from repro.core.ise import ISEConfig
+from repro.data.loggen import DATASETS, generate_lines
+from repro.data.pipeline import (
+    PrefetchLoader,
+    TokenBatcher,
+    decode_bytes,
+    encode_bytes,
+    read_shard,
+    write_logzip_shards,
+)
+
+
+@pytest.fixture(scope="module")
+def shard_dir(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("shards"))
+    cfg = LogzipConfig(level=3, format=DATASETS["HDFS"]["format"], ise=ISEConfig(min_sample=100))
+    write_logzip_shards(generate_lines("HDFS", 2400, seed=5), d, shard_lines=800, cfg=cfg)
+    return d
+
+
+def test_bytes_codec():
+    s = "hello \t log ✓"
+    assert decode_bytes(encode_bytes(s)) == s
+
+
+def test_shard_modes(shard_dir):
+    files = sorted(f for f in os.listdir(shard_dir) if f.endswith(".lzj"))
+    assert len(files) == 3
+    lines = read_shard(os.path.join(shard_dir, files[0]), "bytes")
+    assert len(lines) == 800
+    ev = read_shard(os.path.join(shard_dir, files[0]), "events")[0]
+    assert ev.dtype == np.int32 and len(ev) > 700
+
+
+def test_batcher_shapes_and_packing(shard_dir):
+    b = TokenBatcher(shard_dir, mode="bytes", seed=1)
+    out = b.next_batch(4, 128)
+    assert out["tokens"].shape == (4, 128) and out["labels"].shape == (4, 128)
+    # labels are next-token shifted
+    assert (out["tokens"][0, 1:] == out["labels"][0, :-1]).all()
+
+
+def test_batcher_exact_resume(shard_dir):
+    b1 = TokenBatcher(shard_dir, mode="bytes", seed=2)
+    for _ in range(5):
+        b1.next_batch(2, 64)
+    state = b1.state_dict()
+    want = [b1.next_batch(2, 64)["tokens"] for _ in range(3)]
+    b2 = TokenBatcher(shard_dir, mode="bytes", seed=2)
+    b2.load_state_dict(state)
+    got = [b2.next_batch(2, 64)["tokens"] for _ in range(3)]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_batcher_events_mode(shard_dir):
+    b = TokenBatcher(shard_dir, mode="events", seed=0)
+    out = b.next_batch(2, 32)
+    assert out["tokens"].shape == (2, 32)
+
+
+def test_prefetch_straggler(shard_dir):
+    files = [os.path.join(shard_dir, f) for f in sorted(os.listdir(shard_dir)) if f.endswith(".lzj")]
+    calls = {"n": 0}
+
+    def slow_reader(path):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.35)  # first shard is a straggler
+        return read_shard(path, "bytes")
+
+    pl = PrefetchLoader(files, slow_reader, depth=2, workers=2, straggler_timeout=0.1)
+    served = list(pl)
+    pl.close()
+    assert len(served) == len(files)
+    assert pl.stats["straggler_requeues"] >= 1  # the stall was observed
+    assert pl.stats["served"] == len(files)
