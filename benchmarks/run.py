@@ -29,9 +29,18 @@ def main() -> None:
     args = ap.parse_args()
     n = 4000 if args.quick else args.lines
 
-    from benchmarks import compression, kernel_bench
+    from benchmarks import compression, kernel_bench, throughput
 
     t0 = time.time()
+    report = throughput.run(n)
+    # quick runs must not clobber the tracked 40k-line perf-trajectory
+    # artifact; they get their own file (CI uploads BENCH_compress*.json)
+    throughput.write_report(
+        report, path=None if n >= 40000 else
+        throughput.DEFAULT_REPORT_PATH.replace(".json", ".quick.json"))
+    _emit("Compress throughput (BENCH_compress.json; per-stage breakdown in the file)",
+          [{k: r[k] for k in ("label", "lines_per_sec", "mb_per_sec", "compression_ratio")}
+           for r in report["results"]])
     _emit("Table II — compression ratio (synthetic corpora; orderings are the target)",
           compression.table2(n))
     _emit("Fig 6 — compressed MB by logzip level (gzip kernel)",

@@ -1,0 +1,134 @@
+"""Compression throughput benchmark -> ``BENCH_compress.json``.
+
+Measures ``compress()`` end-to-end (lines/sec, MB/s) with the per-stage
+wall-time breakdown from ``codec.StageTimer`` (parse / dedup / tokenize /
+encode / ise.cluster / ise.match / spans / columns / pack / kernel), on:
+
+- the 40k-line synthetic HDFS corpus (level 3, gzip kernel) — the
+  recorded perf trajectory every PR appends to;
+- the same corpus with the dedup fast path disabled (ablation);
+- a duplicate-heavy variant (each distinct line repeated ~10x, the
+  regime real logs live in — LogShrink/LogLite's observation) where the
+  dedup stage collapses most of the work.
+
+``SEED_REFERENCE`` is the seed-tree measurement of the same 40k-line
+HDFS / level-3 / gzip configuration in this container, recorded when the
+fast path landed; ``speedup_vs_seed`` in the JSON is computed against it.
+
+PYTHONPATH=src python -m benchmarks.throughput [--quick] [--lines N] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import numpy as np
+
+from repro.core.codec import LogzipConfig, compress, decompress
+from repro.core.ise import ISEConfig
+from repro.data.loggen import generate_lines
+
+ISE_FAST = ISEConfig(sample_rate=0.01, min_sample=400, max_iters=4)
+
+# seed compress() on this exact benchmark (40k-line synthetic HDFS,
+# level 3, gzip kernel), measured in this container at commit 9e78cd3
+# before the dedup/vectorization fast path landed.
+SEED_REFERENCE = {"lines_per_sec": 3050.0, "wall_s": 13.11, "commit": "9e78cd3"}
+
+
+def _dup_heavy(name: str, n_lines: int, factor: int = 10, seed: int = 0) -> list[str]:
+    """~n_lines lines with each distinct line repeated ``factor``x, shuffled
+    deterministically — the exact-duplicate regime of production logs."""
+    base = list(generate_lines(name, max(1, n_lines // factor), seed))
+    lines = base * factor
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(lines))
+    return [lines[i] for i in order]
+
+
+def bench_one(lines: list[str], cfg: LogzipConfig, label: str, *, verify: bool = True) -> dict:
+    raw_bytes = sum(len(l.encode("utf-8", "surrogateescape")) + 1 for l in lines) - 1
+    stages: dict[str, float] = {}
+    t0 = time.perf_counter()
+    blob = compress(lines, cfg, stage_times=stages)
+    wall = time.perf_counter() - t0
+    if verify:
+        assert decompress(blob) == lines, f"{label}: lossless round-trip FAILED"
+    return {
+        "label": label,
+        "n_lines": len(lines),
+        "raw_mb": raw_bytes / 1e6,
+        "level": cfg.level,
+        "kernel": cfg.kernel,
+        "dedup": cfg.dedup,
+        "wall_s": round(wall, 4),
+        "lines_per_sec": round(len(lines) / wall, 1),
+        "mb_per_sec": round(raw_bytes / 1e6 / wall, 3),
+        "compressed_bytes": len(blob),
+        "compression_ratio": round(raw_bytes / len(blob), 3),
+        "stages_s": {k: round(v, 4) for k, v in sorted(stages.items())},
+    }
+
+
+def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
+    from repro.data.loggen import DATASETS
+
+    fmt = DATASETS[dataset]["format"]
+    cfg = LogzipConfig(level=3, kernel="gzip", format=fmt, ise=ISE_FAST)
+    cfg_nodedup = LogzipConfig(level=3, kernel="gzip", format=fmt, ise=ISE_FAST, dedup=False)
+
+    lines = list(generate_lines(dataset, n_lines, seed=0))
+    results = [
+        bench_one(lines, cfg, f"{dataset}-{n_lines}"),
+        bench_one(lines, cfg_nodedup, f"{dataset}-{n_lines}-nodedup"),
+        bench_one(_dup_heavy(dataset, n_lines), cfg, f"{dataset}-{n_lines}-dupheavy"),
+    ]
+    fast = results[0]
+    report = {
+        "benchmark": "compress_throughput",
+        "host": {"platform": platform.platform(), "python": platform.python_version()},
+        "config": {"dataset": dataset, "n_lines": n_lines, "level": 3, "kernel": "gzip"},
+        "seed_reference": SEED_REFERENCE,
+        "speedup_vs_seed": round(fast["lines_per_sec"] / SEED_REFERENCE["lines_per_sec"], 2)
+        if n_lines == 40000 and dataset == "HDFS" else None,
+        "results": results,
+    }
+    return report
+
+
+DEFAULT_REPORT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_compress.json")
+
+
+def write_report(report: dict, path: str | None = None) -> str:
+    """Serialize the report to ``BENCH_compress.json`` (single writer —
+    both ``benchmarks.throughput`` and ``benchmarks.run`` go through
+    here so the CI artifact never diverges between entry points)."""
+    out = os.path.abspath(path or DEFAULT_REPORT_PATH)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lines", type=int, default=40000)
+    ap.add_argument("--quick", action="store_true", help="tiny sizes (CI smoke)")
+    ap.add_argument("--out", default=DEFAULT_REPORT_PATH)
+    args = ap.parse_args()
+    report = run(4000 if args.quick else args.lines)
+    out = write_report(report, args.out)
+    for r in report["results"]:
+        print(f"{r['label']:28s} {r['lines_per_sec']:>10.0f} lines/s  "
+              f"{r['mb_per_sec']:>7.2f} MB/s  CR {r['compression_ratio']:.2f}")
+    if report["speedup_vs_seed"]:
+        print(f"speedup vs seed ({SEED_REFERENCE['lines_per_sec']:.0f} lines/s): "
+              f"{report['speedup_vs_seed']:.2f}x")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,7 +52,7 @@ def get_config(arch: str):
 
 
 def shape_applicable(arch: str, shape: str) -> bool:
-    """long_500k needs a sub-quadratic path (DESIGN.md §Arch-applicability)."""
+    """long_500k needs a sub-quadratic path (DESIGN.md §4)."""
     if shape != "long_500k":
         return True
     cfg = get_config(arch)

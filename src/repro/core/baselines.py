@@ -6,7 +6,7 @@
   (Christensen & Li, SIGMOD'13): lines are adaptively routed to buckets by
   similarity to each bucket's recent window; buckets are compressed
   separately; a per-line bucket index restores order. Approximation — the
-  original is not available offline (noted in DESIGN.md).
+  original is not available offline (noted in DESIGN.md §6.4).
 - ``cowic_like``: simplified Cowic (Lin et al., CCGrid'15): column-wise
   split by whitespace position, one object per column, compressed
   per-column (Cowic optimizes query latency, not CR — expect CR ~ gzip,

@@ -27,6 +27,7 @@ from .encode import (
     decode_varints,
     encode_varints,
     esc,
+    factorize,
     join_column,
     pack_container,
     split_column,
@@ -35,6 +36,7 @@ from .encode import (
 )
 from .ise import ISEConfig, iterative_structure_extraction
 from .match import extract_spans
+from .timing import StageTimer
 from .tokenizer import STAR_ID, LogFormat, Vocab, tokenize
 
 FILE_MAGIC = b"LZJF"
@@ -59,17 +61,14 @@ class LogzipConfig:
     # paper §III-E: a pre-extracted TemplateStore skips ISE — new logs are
     # matched against the stored templates (stable EventIDs across archives)
     template_store: object = None
+    # dedup fast path: tokenize / span-extract each *distinct* content
+    # string once and fan results back out by inverse index. Byte-identical
+    # archives either way (property-tested); False only exists as the
+    # reference path for that test and for ablation benchmarks.
+    dedup: bool = True
 
 
 # ----------------------------------------------------------------- helpers
-
-def _factorize(values: list[str]) -> np.ndarray:
-    seen: dict[str, int] = {}
-    out = np.empty(len(values), np.int64)
-    for i, v in enumerate(values):
-        out[i] = seen.setdefault(v, len(seen))
-    return out
-
 
 def _serialize_template(tokens: list[str]) -> str:
     return "\x00".join(WILDCARD_MARK if t is None else esc(t) for t in tokens)
@@ -89,68 +88,106 @@ def _param_substring(tokens: list[str], delims: list[str], s: int, e: int) -> st
 
 # ----------------------------------------------------------------- compress
 
-def compress(lines: list[str], cfg: LogzipConfig | None = None) -> bytes:
+def compress(
+    lines: list[str],
+    cfg: LogzipConfig | None = None,
+    *,
+    stage_times: dict | None = None,
+) -> bytes:
+    """Compress ``lines`` -> archive blob.
+
+    ``stage_times``: optional dict that receives a per-stage wall-time
+    breakdown (parse / dedup / tokenize / encode / ise.* / spans /
+    columns / pack / kernel) — consumed by ``benchmarks/throughput.py``.
+    """
     cfg = cfg or LogzipConfig()
     if cfg.level not in (1, 2, 3):
         raise ValueError("level must be 1, 2 or 3")
+    tm = StageTimer(stage_times)
     objects: dict[str, bytes] = {}
     meta: dict = {"v": 1, "level": cfg.level, "n": len(lines), "format": cfg.format}
 
-    fmt = LogFormat(cfg.format) if cfg.format else None
-    if fmt is not None:
-        columns, ok_idx, bad_idx = fmt.parse(lines)
-        contents = columns[fmt.content_field]
-        meta["fields"] = fmt.fields
-    else:
-        columns, ok_idx, bad_idx = {}, list(range(len(lines))), []
-        contents = list(lines)
+    with tm("parse"):
+        fmt = LogFormat(cfg.format) if cfg.format else None
+        if fmt is not None:
+            columns, ok_idx, bad_idx = fmt.parse(lines)
+            contents = columns[fmt.content_field]
+            meta["fields"] = fmt.fields
+        else:
+            columns, ok_idx, bad_idx = {}, list(range(len(lines))), []
+            contents = list(lines)
 
     # verbatim channel for format-parse failures
     objects["raw.idx"] = encode_varints(np.diff(np.array([-1] + bad_idx)))
     objects["raw.txt"] = join_column([lines[i] for i in bad_idx])
 
     # Level 1: header field columns, sub-field split
-    for f in (fmt.fields if fmt else []):
-        if f == fmt.content_field:
-            continue
-        objects.update(ColumnCodec(f"h.{f}").encode(columns[f]))
+    with tm("columns"):
+        for f in (fmt.fields if fmt else []):
+            if f == fmt.content_field:
+                continue
+            objects.update(ColumnCodec(f"h.{f}").encode(columns[f]))
 
     if cfg.level == 1:
         objects["content.txt"] = join_column(contents)
     else:
-        _encode_content(objects, meta, contents, columns, cfg)
+        _encode_content(objects, meta, contents, columns, cfg, tm)
 
     objects["meta"] = json.dumps(meta).encode("utf-8")
-    container = pack_container(objects)
+    with tm("pack"):
+        container = pack_container(objects)
     kid, comp, _ = KERNELS[cfg.kernel]
-    return FILE_MAGIC + bytes([kid, cfg.level]) + comp(container)
+    with tm("kernel"):
+        blob = comp(container)
+    return FILE_MAGIC + bytes([kid, cfg.level]) + blob
 
 
-def _encode_content(objects, meta, contents: list[str], columns, cfg: LogzipConfig) -> None:
-    """Levels 2/3: ISE + per-template columnar parameter objects."""
+def _encode_content(objects, meta, contents: list[str], columns, cfg: LogzipConfig,
+                    tm: StageTimer) -> None:
+    """Levels 2/3: ISE + per-template columnar parameter objects.
+
+    Dedup-aware fast path: content strings are unique-ified up front
+    (``cfg.dedup``); tokenization, vocab interning, span extraction and
+    the per-line string assembly all run once per *distinct* content and
+    are fanned back out through the inverse index. ISE itself always sees
+    the full per-line arrays (sampling is defined over lines), so the
+    archive bytes are identical with the fast path on or off.
+    """
     n = len(contents)
-    tok_lists: list[list[str]] = []
-    delim_lists: list[list[str]] = []
-    for c in contents:
-        t, d = tokenize(c)
-        tok_lists.append(t)
-        delim_lists.append(d)
+    with tm("dedup"):
+        if cfg.dedup:
+            inverse, uniq = factorize(contents)
+        else:
+            inverse, uniq = np.arange(n, dtype=np.int64), list(contents)
 
-    vocab = Vocab()
-    ids, lens = vocab.encode_batch(tok_lists, cfg.max_tokens)
-    levels = _factorize(columns["Level"]) if "Level" in columns else None
-    comps = _factorize(columns["Component"]) if "Component" in columns else None
+    with tm("tokenize"):
+        tok_u: list[list[str]] = []
+        delim_u: list[list[str]] = []
+        for c in uniq:
+            t, d = tokenize(c)
+            tok_u.append(t)
+            delim_u.append(d)
+
+    with tm("encode"):
+        vocab = Vocab()
+        ids_u, lens_u = vocab.encode_batch(tok_u, cfg.max_tokens, tight=True)
+        ids = ids_u[inverse]
+        lens = lens_u[inverse]
+        levels = factorize(columns["Level"])[0] if "Level" in columns else None
+        comps = factorize(columns["Component"])[0] if "Component" in columns else None
 
     if cfg.template_store is not None:
         from .ise import ISEResult
         from .match import match_first
 
         tpl_ids = cfg.template_store.to_id_arrays(vocab)
-        a = match_first(ids, lens, tpl_ids, use_kernel=cfg.ise.use_kernel)
+        with tm("ise.match"):
+            a = match_first(ids, lens, tpl_ids, use_kernel=cfg.ise.use_kernel)
         res = ISEResult(tpl_ids, a, [float((a >= 0).mean())], [])
         meta["template_store"] = True
     else:
-        res = iterative_structure_extraction(ids, lens, levels, comps, len(vocab), cfg.ise)
+        res = iterative_structure_extraction(ids, lens, levels, comps, len(vocab),
+                                             cfg.ise, stage_times=tm.sink)
     assign = res.assign.copy()
     assign[lens > cfg.max_tokens] = -1  # over-budget lines go verbatim
 
@@ -182,50 +219,95 @@ def _encode_content(objects, meta, contents: list[str], columns, cfg: LogzipConf
     objects["templates"] = join_column(tser)
 
     matched = np.nonzero(assign >= 0)[0]
-    events = [remap[int(assign[i])] for i in matched]
-    objects["events"] = encode_varints(events)
+    remap_arr = np.full(len(res.templates), -1, np.int64)
+    remap_arr[np.asarray(used, np.int64)] = np.arange(len(used))
+    objects["events"] = encode_varints(remap_arr[assign[matched]])
 
+    vocab_arr = np.array([vocab.token(i) for i in range(len(vocab))], dtype=object)
     paradict = ParamDict() if cfg.level >= 3 else None
     for g in used:
         k = remap[g]
         tpl = res.templates[g]
         line_idx = np.nonzero(assign == g)[0]
-        spans = extract_spans(ids[line_idx], lens[line_idx], tpl)
-        n_stars = spans.shape[1]
-        star_vals: list[list[str]] = [[] for _ in range(n_stars)]
-        gap_patterns: list[str] = []
-        for r, li in enumerate(line_idx):
-            toks, delims = tok_lists[li], delim_lists[li]
-            units_end: list[int] = []  # log-token end (exclusive) per unit
-            gaps: list[str] = [delims[0]]
-            si = 0
-            pos = 0
-            for t in tpl:
-                if int(t) == STAR_ID:
-                    s, e = int(spans[r, si, 0]), int(spans[r, si, 1])
-                    star_vals[si].append(_param_substring(toks, delims, s, e))
-                    si += 1
-                    pos = e
-                else:
-                    pos += 1
-                gaps.append(delims[pos])
-            gap_patterns.append("\x00".join(esc(gap) for gap in gaps))
-        for s in range(n_stars):
-            objects.update(ColumnCodec(f"t{k}.v{s}", paradict).encode(star_vals[s]))
-        # gap (unit-delimiter) patterns: tiny dictionary per template
-        pat_list: list[str] = []
-        pat_map: dict[str, int] = {}
-        pat_ids: list[int] = []
-        for p in gap_patterns:
-            pid = pat_map.setdefault(p, len(pat_list))
-            if pid == len(pat_list):
-                pat_list.append(p)
-            pat_ids.append(pid)
-        objects[f"t{k}.gap.pat"] = join_column(pat_list)
-        objects[f"t{k}.gap.pid"] = encode_varints(pat_ids)
+        with tm("spans"):
+            star_cols, pat_list, pat_ids = _template_params(
+                tpl, line_idx, inverse, ids_u, lens_u, tok_u, delim_u, vocab_arr)
+        with tm("columns"):
+            for s, col in enumerate(star_cols):
+                objects.update(ColumnCodec(f"t{k}.v{s}", paradict).encode(col))
+            objects[f"t{k}.gap.pat"] = join_column(pat_list)
+            objects[f"t{k}.gap.pid"] = encode_varints(pat_ids)
 
     if paradict is not None:
         objects["paradict"] = paradict.encode()
+
+
+def _template_params(tpl, line_idx, inverse, ids_u, lens_u, tok_u, delim_u, vocab_arr):
+    """Star-value columns + gap-pattern dictionary for one template.
+
+    All heavy work runs once per distinct content: spans are extracted on
+    the unique rows, star substrings come from one vectorized vocab
+    lookup (single-token spans, the common case) or a per-unique join,
+    and gap patterns are memoized on (delims, span widths) — identical to
+    walking every line, because the gap sequence is a pure function of
+    that key for a fixed template.
+    """
+    u_lines = inverse[line_idx]
+    uu_inv, uu = factorize(u_lines)  # uniques in first-line-occurrence order
+    uu_arr = np.asarray(uu, np.int64)
+    spans_u = extract_spans(ids_u[uu_arr], lens_u[uu_arr], tpl)
+    n_uu, n_stars = spans_u.shape[:2]
+    widths = spans_u[:, :, 1] - spans_u[:, :, 0]
+
+    ustar = np.empty((n_uu, n_stars), dtype=object)
+    for si in range(n_stars):
+        single = widths[:, si] == 1
+        if single.any():
+            rows = np.nonzero(single)[0]
+            ustar[rows, si] = vocab_arr[ids_u[uu_arr[rows], spans_u[rows, si, 0]]]
+        for r in np.nonzero(~single)[0]:
+            u = uu[r]
+            ustar[r, si] = _param_substring(
+                tok_u[u], delim_u[u], int(spans_u[r, si, 0]), int(spans_u[r, si, 1]))
+
+    # gap (unit-delimiter) pattern per unique, memoized: for a fixed
+    # template the delimiter positions depend only on the star widths
+    tpl_is_star = [int(t) == STAR_ID for t in tpl]
+    gcache: dict[tuple, str] = {}
+    upat: list[str] = []
+    for r in range(n_uu):
+        delims = delim_u[uu[r]]
+        key = (widths[r].tobytes(), *delims)
+        p = gcache.get(key)
+        if p is None:
+            gaps = [delims[0]]
+            si = 0
+            pos = 0
+            for is_star in tpl_is_star:
+                if is_star:
+                    pos = int(spans_u[r, si, 1])
+                    si += 1
+                else:
+                    pos += 1
+                gaps.append(delims[pos])
+            p = "\x00".join(esc(gap) for gap in gaps)
+            gcache[key] = p
+        upat.append(p)
+
+    # intern patterns over uniques (first-occurrence order == line order)
+    pat_map: dict[str, int] = {}
+    pat_list: list[str] = []
+    upid = np.empty(n_uu, np.int64)
+    for r, p in enumerate(upat):
+        pid = pat_map.get(p)
+        if pid is None:
+            pid = len(pat_list)
+            pat_map[p] = pid
+            pat_list.append(p)
+        upid[r] = pid
+
+    star_cols = [ustar[uu_inv, si].tolist() for si in range(n_stars)]
+    return star_cols, pat_list, upid[uu_inv]
 
 
 # --------------------------------------------------------------- decompress

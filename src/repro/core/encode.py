@@ -4,7 +4,7 @@ Everything here is lossless by construction:
 
 - ``varint`` streams for id columns (EventIDs, pattern ids, ParaIDs).
   (The paper renders ParaIDs as base-64 *text*; we use LEB128 binary —
-  same idea, strictly denser before the kernel. Recorded in DESIGN.md.)
+  same idea, strictly denser before the kernel. Recorded in DESIGN.md §3.)
 - ``esc``/``unesc`` make arbitrary strings newline-safe so columns can be
   newline-joined.
 - ``ColumnCodec``: the paper's sub-field splitting. Each value is split on
@@ -18,6 +18,8 @@ Everything here is lossless by construction:
 from __future__ import annotations
 
 import re
+
+import numpy as np
 
 # ---------------------------------------------------------------- varint
 
@@ -33,10 +35,37 @@ def write_varint(out: bytearray, v: int) -> None:
 
 
 def encode_varints(values) -> bytes:
-    out = bytearray()
-    for v in values:
-        write_varint(out, int(v))
-    return bytes(out)
+    """LEB128-encode a sequence of non-negative ints, vectorized.
+
+    Identical byte output to a per-value ``write_varint`` loop; the whole
+    stream is assembled with numpy (single-byte fast path for id columns
+    that fit in 7 bits, which is most of them)."""
+    arr = values if isinstance(values, np.ndarray) else np.asarray(list(values))
+    if arr.size == 0:
+        return b""
+    if arr.dtype == object or arr.dtype.kind not in "iu":
+        # arbitrary-precision values (or non-int input): scalar fallback
+        out = bytearray()
+        for v in arr.ravel():
+            write_varint(out, int(v))
+        return bytes(out)
+    v = arr.astype(np.uint64).ravel()
+    if int(v.max()) < 0x80:
+        return v.astype(np.uint8).tobytes()
+    nbytes = np.ones(v.shape, np.int64)
+    x = v >> np.uint64(7)
+    while x.any():
+        nbytes += x > 0
+        x >>= np.uint64(7)
+    ends = np.cumsum(nbytes)
+    starts = ends - nbytes
+    out = np.zeros(int(ends[-1]), np.uint8)
+    for b in range(int(nbytes.max())):
+        sel = nbytes > b
+        byte = ((v[sel] >> np.uint64(7 * b)) & np.uint64(0x7F)).astype(np.uint8)
+        cont = (nbytes[sel] > b + 1).astype(np.uint8) << 7
+        out[starts[sel] + b] = byte | cont
+    return out.tobytes()
 
 
 def decode_varints(data: bytes) -> list[int]:
@@ -82,12 +111,18 @@ def unesc(s: str) -> str:
     return "".join(out)
 
 
-def join_column(values: list[str]) -> bytes:
+def join_column(values: list[str], already_safe: bool = False) -> bytes:
     """varint count prefix + newline-joined escaped values (unambiguous
-    for [] vs [""])."""
+    for [] vs [""]).
+
+    ``already_safe=True`` skips the per-value ``esc`` pass for values the
+    caller guarantees contain no escapable bytes (e.g. alphanumeric
+    sub-field parts) — byte-identical output, since ``esc`` is the
+    identity on such strings."""
     head = bytearray()
     write_varint(head, len(values))
-    return bytes(head) + "\n".join(esc(v) for v in values).encode("utf-8")
+    joined = "\n".join(values) if already_safe else "\n".join(esc(v) for v in values)
+    return bytes(head) + joined.encode("utf-8")
 
 
 def split_column(data: bytes) -> list[str]:
@@ -135,6 +170,26 @@ class ParamDict:
 
 # ---------------------------------------------------------------- columns
 
+def factorize(values) -> tuple[np.ndarray, list]:
+    """(inverse indices, distinct values in first-occurrence order).
+
+    The first-occurrence order is load-bearing: every dedup fast path in
+    the codec relies on it to reproduce the non-dedup byte stream
+    (pattern ids, ParaIDs and vocab ids are all assigned at first
+    occurrence). One implementation, shared — do not fork it."""
+    seen: dict = {}
+    inv = np.empty(len(values), np.int64)
+    uniq: list = []
+    for i, v in enumerate(values):
+        j = seen.get(v)
+        if j is None:
+            j = len(uniq)
+            seen[v] = j
+            uniq.append(v)
+        inv[i] = j
+    return inv, uniq
+
+
 _SLOT_RE = re.compile(r"[0-9A-Za-z]+")
 
 
@@ -168,11 +223,17 @@ class ColumnCodec:
         self.paradict = paradict
 
     def encode(self, values: list[str]) -> dict[str, bytes]:
+        """Byte-identical to the per-value reference loop, but the regex /
+        escape work runs once per *distinct* value: values are factorized
+        (first-occurrence order, so pattern ids and ParaID assignment
+        order are unchanged) and the per-line remainder is numpy."""
+        n = len(values)
+        inv, uvals = factorize(values)
         patterns: dict[str, int] = {}
         pat_list: list[str] = []
-        pat_ids: list[int] = []
-        slots: dict[tuple[int, int], list] = {}  # (pattern id, slot) -> parts
-        for v in values:
+        upid = np.empty(len(uvals), np.int64)
+        uparts: list[list[str]] = []
+        for j, v in enumerate(uvals):
             # escape first so the \x00 slot marker can never collide with
             # value bytes; decode merges then un-escapes.
             pattern, parts = split_subfields(esc(v))
@@ -181,19 +242,40 @@ class ColumnCodec:
                 pid = len(pat_list)
                 patterns[pattern] = pid
                 pat_list.append(pattern)
-            pat_ids.append(pid)
-            for k, part in enumerate(parts):
-                slots.setdefault((pid, k), []).append(part)
+            upid[j] = pid
+            uparts.append(parts)
+        pat_ids = upid[inv] if n else np.zeros(0, np.int64)
         objs: dict[str, bytes] = {
             f"{self.name}.pat": join_column(pat_list),
             f"{self.name}.pid": encode_varints(pat_ids),
         }
-        for (pid, k), parts in sorted(slots.items()):
-            key = f"{self.name}.p{pid}s{k}"
-            if self.paradict is not None:
-                objs[key] = encode_varints(self.paradict.id(p) for p in parts)
-            else:
-                objs[key] = join_column(parts)
+        # one stable argsort groups value occurrences by pattern while
+        # preserving value order within each group (single pass, no
+        # per-pattern rescan of the whole column)
+        order = np.argsort(pat_ids, kind="stable")
+        counts = np.bincount(pat_ids, minlength=len(pat_list)).astype(np.int64)
+        group_start = 0
+        for pid in range(len(pat_list)):
+            c = int(counts[pid])
+            us = inv[order[group_start:group_start + c]]  # uniques, value order
+            group_start += c
+            n_slots = len(uparts[int(us[0])])
+            if n_slots == 0:
+                continue
+            # factorize the unique-value ids within this pattern group so
+            # per-slot work (ParaID interning / joining) is per distinct
+            # value; first-occurrence order keeps ParaIDs identical.
+            g_inv, g_uniq = factorize(us)
+            for k in range(n_slots):
+                key = f"{self.name}.p{pid}s{k}"
+                col_u = [uparts[u][k] for u in g_uniq]
+                if self.paradict is not None:
+                    pd_id = self.paradict.id
+                    uids = np.fromiter((pd_id(p) for p in col_u), np.int64, len(col_u))
+                    objs[key] = encode_varints(uids[g_inv])
+                else:
+                    # parts are alphanumeric runs -> esc is the identity
+                    objs[key] = join_column([col_u[g] for g in g_inv], already_safe=True)
         return objs
 
     def decode(self, objs: dict[str, bytes], n: int, paravalues: list[str] | None = None) -> list[str]:

@@ -17,6 +17,7 @@ import numpy as np
 
 from .cluster import ClusterConfig, cluster_sample
 from .match import match_first
+from .timing import StageTimer
 from .tokenizer import STAR_ID
 
 
@@ -50,8 +51,10 @@ def iterative_structure_extraction(
     comps: np.ndarray | None = None,
     vocab_size: int | None = None,
     cfg: ISEConfig | None = None,
+    stage_times: dict | None = None,
 ) -> ISEResult:
     cfg = cfg or ISEConfig()
+    tm = StageTimer(stage_times)
     n = ids.shape[0]
     vocab_size = vocab_size or int(ids.max(initial=1)) + 1
     rng = np.random.default_rng(cfg.seed)
@@ -74,14 +77,15 @@ def iterative_structure_extraction(
         sampled_counts.append(len(sample_idx))
 
         # --- clustering the sample -> new templates ---
-        new_templates = cluster_sample(
-            ids[sample_idx],
-            lens[sample_idx],
-            levels[sample_idx] if levels is not None else None,
-            comps[sample_idx] if comps is not None else None,
-            cfg.cluster,
-            vocab_size,
-        )
+        with tm("ise.cluster"):
+            new_templates = cluster_sample(
+                ids[sample_idx],
+                lens[sample_idx],
+                levels[sample_idx] if levels is not None else None,
+                comps[sample_idx] if comps is not None else None,
+                cfg.cluster,
+                vocab_size,
+            )
         fresh: list[np.ndarray] = []
         for tpl in new_templates:
             key = tuple(int(x) for x in tpl)
@@ -95,7 +99,9 @@ def iterative_structure_extraction(
         # (previously-unmatched lines can only match templates discovered
         # this round; older templates already failed on them)
         if fresh:
-            local = match_first(ids[unmatched], lens[unmatched], fresh, use_kernel=cfg.use_kernel)
+            with tm("ise.match"):
+                local = match_first(ids[unmatched], lens[unmatched], fresh,
+                                    use_kernel=cfg.use_kernel)
             hit = local >= 0
             assign[unmatched[hit]] = base_id + local[hit]
             unmatched = unmatched[~hit]

@@ -15,13 +15,21 @@ vectorized update over a whole *block of lines*, so the work is
 ``repro.kernels.wildcard_match`` tiles onto VMEM. The numpy path here is
 the host fallback and the oracle for the Pallas kernel.
 
+Matching only needs the *final* DP column, so ``match_one_template``
+carries a rolling (N, T+1) column instead of materializing the full
+(N, T+1, m+1) tensor; the full tensor is only built for the span
+backtrack in ``extract_spans``.
+
 Parameter spans are recovered by a vectorized backtrack (later stars take
 the shortest span; any valid alignment is lossless — the tie-break only
 fixes determinism).
 
 ``match_first`` assigns each line the lowest-id matching template —
 the production-canonical assignment. First-token bucketing (the trie's
-root-level pruning) cuts the candidate template set per line.
+root-level pruning) cuts the candidate template set per line, and exact
+duplicate (ids, len) rows are collapsed before the DP runs — matching is
+deterministic per row, so the result is identical, but real logs are
+dominated by repeats and only pay for distinct lines.
 """
 
 from __future__ import annotations
@@ -30,14 +38,16 @@ import numpy as np
 
 from .tokenizer import PAD_ID, STAR_ID
 
-CHUNK = 4096  # lines per DP chunk (bounds the M tensor to ~70 MB)
+CHUNK = 4096  # lines per DP chunk (bounds the M tensor)
+DEDUP_MIN_LINES = 512  # below this the np.unique sort costs more than it saves
 
 
 def _dp_columns(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
     """All DP columns for one template over a chunk of lines.
 
     ids: (N, T) int32, lens: (N,), template: (m,) id seq (no PAD).
-    Returns M: (N, T+1, m+1) bool.
+    Returns M: (N, T+1, m+1) bool. Only used by the span backtrack —
+    matching uses the rolling-column variant below.
     """
     n, t = ids.shape
     m = len(template)
@@ -58,6 +68,28 @@ def _dp_columns(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.n
     return M
 
 
+def _final_col(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
+    """Final DP column (N, T+1) after consuming the whole template.
+
+    Rolling-column version of ``_dp_columns`` — O(N*T) live memory
+    instead of O(N*T*m)."""
+    n, t = ids.shape
+    col = np.zeros((n, t + 1), dtype=bool)
+    col[:, 0] = True
+    valid = np.arange(1, t + 1)[None, :] <= lens[:, None]
+    for tj in template:
+        tj = int(tj)
+        new = np.zeros_like(col)
+        if tj == STAR_ID:
+            run = np.logical_or.accumulate(col, axis=1)
+            new[:, 1:] = run[:, :-1]
+        else:
+            new[:, 1:] = col[:, :-1] & (ids == tj)
+        new[:, 1:] &= valid
+        col = new
+    return col
+
+
 def match_one_template(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
     """(N,) bool: does each line match this template."""
     out = np.zeros((ids.shape[0],), bool)
@@ -65,8 +97,8 @@ def match_one_template(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) 
     lens_c = np.minimum(lens, t)
     for s in range(0, ids.shape[0], CHUNK):
         sl = slice(s, min(s + CHUNK, ids.shape[0]))
-        M = _dp_columns(ids[sl], lens_c[sl], template)
-        out[sl] = M[np.arange(sl.stop - sl.start), lens_c[sl], len(template)]
+        col = _final_col(ids[sl], lens_c[sl], template)
+        out[sl] = col[np.arange(sl.stop - sl.start), lens_c[sl]]
     # over-length lines never match (their tail was truncated)
     out &= lens <= t
     return out
@@ -77,24 +109,35 @@ def match_first(
     lens: np.ndarray,
     templates: list[np.ndarray],
     use_kernel: bool = False,
+    dedup: bool = True,
 ) -> np.ndarray:
     """Assign each line the lowest-id matching template (-1 = none).
 
     Templates are bucketed by first token (literal or '*') like the trie
     root, so each line only runs the DP against plausible candidates.
+    With ``dedup`` (default) duplicate (ids, len) rows are matched once
+    and the assignment is broadcast back — bit-identical results, and the
+    DP only pays for distinct lines.
     """
     n = ids.shape[0]
     assign = np.full((n,), -1, np.int32)
     if not templates or n == 0:
         return assign
 
+    if dedup and n >= DEDUP_MIN_LINES:
+        key = np.column_stack([lens.astype(np.int32), ids])
+        uniq, inv = np.unique(key, axis=0, return_inverse=True)
+        if len(uniq) < n:
+            sub = match_first(
+                np.ascontiguousarray(uniq[:, 1:]), uniq[:, 0], templates,
+                use_kernel=use_kernel, dedup=False,
+            )
+            return sub[inv].astype(np.int32)
+
     if use_kernel:
         from repro.kernels import ops as kops
 
-        matches = kops.wildcard_match_host(ids, lens, templates)  # (N, K) bool
-        any_m = matches.any(axis=1)
-        assign[any_m] = np.argmax(matches[any_m], axis=1)
-        return assign
+        return kops.match_first_bucketed(ids, lens, templates)
 
     first_tok = ids[:, 0]
     for k, tpl in enumerate(templates):
@@ -126,9 +169,7 @@ def extract_spans(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np
     for s0 in range(0, n, CHUNK):
         sl = slice(s0, min(s0 + CHUNK, n))
         M = _dp_columns(ids[sl], lens[sl], template)
-        nn = sl.stop - sl.start
         i = lens[sl].astype(np.int64).copy()  # current log position per line
-        rows = np.arange(nn)
         star_i = len(stars) - 1
         pos = np.arange(t + 1)
         for j in range(m, 0, -1):

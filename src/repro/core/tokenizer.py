@@ -41,7 +41,7 @@ def _token_re(delimiters: str) -> re.Pattern:
     pat = _TOKEN_RE_CACHE.get(delimiters)
     if pat is None:
         cls = re.escape(delimiters)
-        pat = re.compile(rf"[^{cls}]+|[{cls}]+")
+        pat = re.compile(rf"[^{cls}]+")
         _TOKEN_RE_CACHE[delimiters] = pat
     return pat
 
@@ -52,19 +52,11 @@ def tokenize(content: str, delimiters: str = DEFAULT_DELIMITERS) -> tuple[list[s
     ``len(delims) == len(tokens) + 1``; delims[0] / delims[-1] are the
     (possibly empty) leading / trailing delimiter runs.
     """
-    tokens: list[str] = []
-    delims: list[str] = [""]
-    if not content:
-        return tokens, delims
-    dset = set(delimiters)
-    # findall yields maximal alternating runs of token / delimiter chars.
-    for piece in _token_re(delimiters).findall(content):
-        if piece[0] in dset:
-            delims[-1] += piece
-        else:
-            tokens.append(piece)
-            delims.append("")
-    return tokens, delims
+    # Two C-level regex passes instead of a Python loop over runs:
+    # findall gives the maximal token runs, split gives the delimiter runs
+    # around them (including the possibly-empty leading/trailing runs).
+    pat = _token_re(delimiters)
+    return pat.findall(content), pat.split(content)
 
 
 def reassemble(tokens: list[str], delims: list[str]) -> str:
@@ -103,6 +95,9 @@ class LogFormat:
             pos = m.end()
         pattern += re.escape(self.format[pos:]) + r"$"
         self.regex = re.compile("^" + pattern)
+        # literal segments around the fields (in appearance order) so
+        # render is one join instead of sequential str.replace passes
+        self._segments = re.split(r"<\w+>", self.format)
 
     def parse(self, lines: list[str]) -> tuple[dict[str, list[str]], list[int], list[int]]:
         """Parse lines -> (field columns, matched line idx, unmatched line idx).
@@ -111,28 +106,34 @@ class LogFormat:
         whitespace, a matched line must round-trip through ``render``;
         otherwise it is treated as unmatched (stored verbatim).
         """
-        columns: dict[str, list[str]] = {f: [] for f in self.fields}
+        cols: list[list[str]] = [[] for _ in self.fields]
         ok_idx: list[int] = []
         bad_idx: list[int] = []
+        segs = self._segments
+        match = self.regex.match
         for i, line in enumerate(lines):
-            m = self.regex.match(line)
+            m = match(line)
             if m is None:
                 bad_idx.append(i)
                 continue
-            vals = m.groupdict()
-            if self.render(vals) != line:
+            vals = m.groups()  # named groups appear in field order
+            rendered = segs[0]
+            for v, seg in zip(vals, segs[1:]):
+                rendered += v + seg
+            if rendered != line:
                 bad_idx.append(i)
                 continue
-            for f in self.fields:
-                columns[f].append(vals[f])
+            for c, v in zip(cols, vals):
+                c.append(v)
             ok_idx.append(i)
-        return columns, ok_idx, bad_idx
+        return dict(zip(self.fields, cols)), ok_idx, bad_idx
 
     def render(self, values: dict[str, str]) -> str:
-        out = self.format
-        for f in self.fields:
-            out = out.replace(f"<{f}>", values[f], 1)
-        return out
+        out = [self._segments[0]]
+        for f, seg in zip(self.fields, self._segments[1:]):
+            out.append(values[f])
+            out.append(seg)
+        return "".join(out)
 
 
 # Formats for the five paper datasets (loghub conventions).
@@ -177,19 +178,52 @@ class Vocab:
         return "*" if t == "\x01*" else t
 
     def encode_batch(
-        self, token_lists: list[list[str]], max_len: int, *, assign: bool = True
+        self, token_lists: list[list[str]], max_len: int, *, assign: bool = True,
+        tight: bool = False,
     ) -> tuple[np.ndarray, np.ndarray]:
-        """-> (ids (N, max_len) int32 PAD-padded, lengths (N,) int32).
+        """-> (ids (N, W) int32 PAD-padded, lengths (N,) int32).
 
-        Lines longer than ``max_len`` get length = actual length (callers
-        treat len > max_len as unmatched / verbatim).
+        ``W = max_len`` normally; with ``tight=True`` the width shrinks to
+        the actual longest line (capped at ``max_len``) so downstream DP
+        matching pays for observed lengths, not the budget. Lines longer
+        than ``max_len`` get length = actual length (callers treat
+        len > max_len as unmatched / verbatim).
+
+        Single-pass: tokens are flattened, interned once per *distinct*
+        token (id assignment keeps first-occurrence order, identical to a
+        per-token scan), and scattered into the padded matrix with numpy.
         """
         n = len(token_lists)
-        ids = np.zeros((n, max_len), dtype=np.int32)
-        lens = np.zeros((n,), dtype=np.int32)
-        get = self.id if assign else self.lookup
-        for r, toks in enumerate(token_lists):
-            lens[r] = len(toks)
-            for c, t in enumerate(toks[:max_len]):
-                ids[r, c] = get(t)
+        lens = np.fromiter((len(t) for t in token_lists), np.int32, count=n)
+        width = max_len
+        if tight:
+            width = max(1, min(max_len, int(lens.max(initial=1))))
+        clens = np.minimum(lens, width)
+        ids = np.zeros((n, width), dtype=np.int32)
+        total = int(clens.sum())
+        if total == 0:
+            return ids, lens
+        flat: list[str] = []
+        for toks, c in zip(token_lists, clens):
+            flat.extend(toks if len(toks) <= width else toks[:c])
+        flat_ids = np.empty(total, np.int32)
+        if assign:
+            to_id, to_str = self._to_id, self._to_str
+            for i, t in enumerate(flat):
+                if t == "*":
+                    t = "\x01*"
+                v = to_id.get(t)
+                if v is None:
+                    v = len(to_str)
+                    to_id[t] = v
+                    to_str.append(t)
+                flat_ids[i] = v
+        else:
+            get = self._to_id.get
+            for i, t in enumerate(flat):
+                flat_ids[i] = get("\x01*" if t == "*" else t, PAD_ID)
+        rows = np.repeat(np.arange(n), clens)
+        starts = np.cumsum(clens) - clens
+        cols = np.arange(total) - np.repeat(starts, clens)
+        ids[rows, cols] = flat_ids
         return ids, lens

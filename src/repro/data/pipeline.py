@@ -188,60 +188,127 @@ class TokenBatcher:
 # ---------------------------------------------------------------- prefetch
 
 class PrefetchLoader:
-    """Decode-ahead with straggler skip-and-requeue.
+    """Decode-ahead with straggler requeue.
 
     ``reader(path)`` runs in worker threads; results enter a bounded
-    queue. If the head-of-line shard takes longer than
-    ``straggler_timeout`` seconds, it is requeued at the back and the
-    next completed shard is served instead (bounded out-of-order window,
-    logged in ``self.stats``).
+    queue. If no shard completes within ``straggler_timeout`` seconds,
+    every in-flight shard that has exceeded the timeout is *actually*
+    re-put into ``self.pending`` (up to ``max_requeues`` attempts each),
+    so a genuinely lost shard — hung reader, dead worker — is retried by
+    another worker instead of stalling the iterator forever. Duplicate
+    completions (the original attempt finishing after its retry) are
+    dropped, and a *failure* from a superseded attempt is ignored while
+    a retry for that shard is still queued or running (hang-then-raise
+    readers get their retry). A shard that exhausts its retries raises
+    ``RuntimeError``; an error with no retry outstanding propagates.
     """
 
     def __init__(self, paths: list[str], reader, depth: int = 4, workers: int = 2,
-                 straggler_timeout: float = 30.0):
-        self.paths = list(paths)
+                 straggler_timeout: float = 30.0, max_requeues: int = 5):
+        # NOTE: straggler_timeout should comfortably exceed a normal read —
+        # a slow-but-healthy shard burns one requeue per timeout window,
+        # and only `max_requeues` consecutive windows without a completion
+        # escalate to RuntimeError.
+        # repeated paths are collapsed (order-preserving): delivery is
+        # tracked per path, so duplicates would stall the served-count
+        self.paths = list(dict.fromkeys(paths))
         self.reader = reader
         self.timeout = straggler_timeout
+        self.max_requeues = max_requeues
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.pending: queue.Queue = queue.Queue()
-        for p in self.paths:
-            self.pending.put(p)
         self.stats = {"served": 0, "straggler_requeues": 0}
         self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._inflight: dict[str, float] = {}   # path -> attempt start time
+        self._requeues: dict[str, int] = {}     # path -> retry count
+        self._live: dict[str, int] = {}         # path -> queued + running attempts
+        for p in self.paths:
+            self._live[p] = 1
+            self.pending.put(p)
         self.threads = [threading.Thread(target=self._work, daemon=True) for _ in range(workers)]
         for t in self.threads:
             t.start()
+
+    def _put(self, item) -> None:
+        """Bounded q.put that keeps checking _stop so an abandoned
+        iterator can't leave workers blocked on a full queue forever."""
+        while not self._stop.is_set():
+            try:
+                self.q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
 
     def _work(self):
         while not self._stop.is_set():
             try:
                 path = self.pending.get(timeout=0.1)
             except queue.Empty:
-                return
-            t0 = time.monotonic()
+                continue  # stay alive: requeued stragglers may arrive later
+            with self._lock:
+                self._inflight[path] = time.monotonic()
             try:
                 data = self.reader(path)
             except Exception as e:  # pragma: no cover - defensive
-                self.q.put(("error", path, e))
+                with self._lock:
+                    self._inflight.pop(path, None)
+                    self._live[path] = self._live.get(path, 1) - 1
+                self._put(("error", path, e))
                 continue
-            self.q.put(("ok", path, data, time.monotonic() - t0))
+            with self._lock:
+                self._inflight.pop(path, None)
+                self._live[path] = self._live.get(path, 1) - 1
+            self._put(("ok", path, data, time.monotonic()))
+
+    def _requeue_stale(self) -> None:
+        """Re-put every timed-out in-flight shard (bounded retries)."""
+        now = time.monotonic()
+        with self._lock:
+            stale = [p for p, t0 in self._inflight.items() if now - t0 > self.timeout]
+            for p in stale:
+                tries = self._requeues.get(p, 0)
+                if tries >= self.max_requeues:
+                    raise RuntimeError(
+                        f"shard {p!r} lost: {tries} requeues all timed out "
+                        f"(straggler_timeout={self.timeout}s)")
+                self._requeues[p] = tries + 1
+                # reset the attempt clock so the same stall isn't requeued
+                # again before the retry has had a full timeout window
+                self._inflight[p] = now
+                self._live[p] = self._live.get(p, 0) + 1
+                self.stats["straggler_requeues"] += 1
+                self.pending.put(p)
 
     def __iter__(self):
         served = 0
+        delivered: set[str] = set()
         total = len(self.paths)
-        while served < total:
-            try:
-                item = self.q.get(timeout=self.timeout)
-            except queue.Empty:
-                # head-of-line straggler: requeue whatever is still pending
-                # behind a fresh attempt and keep waiting on the queue.
-                self.stats["straggler_requeues"] += 1
-                continue
-            if item[0] == "error":
-                raise item[2]
-            served += 1
-            self.stats["served"] = served
-            yield item[1], item[2]
+        try:
+            while served < total:
+                try:
+                    item = self.q.get(timeout=self.timeout)
+                except queue.Empty:
+                    self._requeue_stale()
+                    continue
+                if item[1] in delivered:
+                    continue  # late duplicate (or late failure) of a
+                    # requeued straggler whose retry already served it
+                if item[0] == "error":
+                    with self._lock:
+                        retry_possible = self._live.get(item[1], 0) > 0
+                    if retry_possible:
+                        continue  # another attempt is queued or running —
+                        # a hang-then-raise reader still gets its retry
+                    raise item[2]
+                delivered.add(item[1])
+                served += 1
+                self.stats["served"] = served
+                yield item[1], item[2]
+        finally:
+            # iteration over (complete or abandoned): stop the workers so
+            # a consumer that breaks out early doesn't leak polling threads
+            self._stop.set()
 
     def close(self):
         self._stop.set()

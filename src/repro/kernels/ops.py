@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import ref
 from .simcount import simcount as _simcount
+from .wildcard_match import STAR_ID
 from .wildcard_match import wildcard_match as _wildcard_match
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -44,7 +45,16 @@ def wildcard_match(logs, lens, templates, t_lens) -> jnp.ndarray:
 
 
 def pack_templates(templates: list[np.ndarray], t_max: int | None = None) -> tuple[np.ndarray, np.ndarray]:
-    """Pad a ragged template list into (K, Tt) + (K,) length arrays."""
+    """Pad a ragged template list into (K, Tt) + (K,) length arrays.
+
+    A template longer than ``t_max`` cannot be represented in Tt slots;
+    silently truncating its tokens while recording the full length would
+    make the kernel match a *prefix* the host matcher never would. Such
+    templates get the ``t_len = -1`` sentinel instead: the kernel (and
+    ``ref.wildcard_match_ref``) treat them as matching nothing, which is
+    consistent with the host whenever ``t_max >= logs.shape[1]`` (a
+    template with more units than the log budget can never match).
+    """
     if not templates:
         return np.zeros((0, 1), np.int32), np.zeros((0,), np.int32)
     tt = t_max or max(len(t) for t in templates)
@@ -52,8 +62,12 @@ def pack_templates(templates: list[np.ndarray], t_max: int | None = None) -> tup
     mat = np.zeros((k, tt), np.int32)
     lens = np.zeros((k,), np.int32)
     for i, t in enumerate(templates):
-        lens[i] = len(t)
-        mat[i, : len(t)] = t[:tt]
+        if len(t) > tt:
+            mat[i] = t[:tt]
+            lens[i] = -1  # over-length sentinel: matches nothing
+        else:
+            lens[i] = len(t)
+            mat[i, : len(t)] = t
     return mat, lens
 
 
@@ -63,6 +77,50 @@ def wildcard_match_host(ids: np.ndarray, lens: np.ndarray, templates: list[np.nd
     if tmpl.shape[0] == 0:
         return np.zeros((ids.shape[0], 0), bool)
     return np.asarray(wildcard_match(ids, lens, tmpl, tlens))
+
+
+def match_first_bucketed(ids: np.ndarray, lens: np.ndarray, templates: list[np.ndarray]) -> np.ndarray:
+    """Lowest-id matching template per line via the Pallas kernel, with
+    first-token bucketing (the trie's root-level pruning) wired into the
+    kernel path: instead of one dense N x K launch, templates are grouped
+    by their first literal token and each bucket's kernel only sees the
+    lines that start with that token. Star-first templates run against
+    all lines. -> (N,) int32 assignment, -1 = none.
+    """
+    n = ids.shape[0]
+    n_tpl = len(templates)
+    best = np.full((n,), n_tpl, np.int64)  # sentinel: no match
+    if n == 0 or n_tpl == 0:
+        return np.full((n,), -1, np.int32)
+
+    buckets: dict[int, list[int]] = {}
+    star_bucket: list[int] = []
+    for k, tpl in enumerate(templates):
+        if len(tpl) == 0:
+            continue  # empty templates match nothing (host semantics)
+        if int(tpl[0]) == STAR_ID:
+            star_bucket.append(k)
+        else:
+            buckets.setdefault(int(tpl[0]), []).append(k)
+
+    def run(line_sel: np.ndarray, tidx: list[int]) -> None:
+        sub = wildcard_match_host(ids[line_sel], lens[line_sel], [templates[k] for k in tidx])
+        any_m = sub.any(axis=1)
+        if not any_m.any():
+            return
+        # tidx is ascending, argmax picks the first True -> lowest id in bucket
+        cand = np.asarray(tidx, np.int64)[sub.argmax(axis=1)]
+        rows = line_sel[any_m]
+        best[rows] = np.minimum(best[rows], cand[any_m])
+
+    first_tok = ids[:, 0] if ids.shape[1] else np.zeros((n,), np.int32)
+    for f, tidx in buckets.items():
+        sel = np.nonzero(first_tok == f)[0]
+        if len(sel):
+            run(sel, tidx)
+    if star_bucket:
+        run(np.arange(n), star_bucket)
+    return np.where(best < n_tpl, best, -1).astype(np.int32)
 
 
 def wildcard_match_sharded(logs, lens, templates, t_lens, mesh: Mesh, axis: str = "data"):

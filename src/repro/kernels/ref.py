@@ -41,7 +41,9 @@ def wildcard_match_ref(
     Column recurrence (see core.match): for each template position j,
         literal: col[i] = prev[i-1] & (log[i-1] == t_j)
         star:    col[i] = OR_{i' < i} prev[i']
-    then match = col[len(log)] after t_len steps.
+    then match = col[len(log)] after t_len steps. ``t_len < 0`` is the
+    matches-nothing sentinel (grid padding rows, over-length templates
+    from ``ops.pack_templates``).
     """
     n, t = logs.shape
     k, tt = templates.shape
@@ -61,4 +63,4 @@ def wildcard_match_ref(
         col = jnp.where(active, new, col)
     idx = jnp.clip(lens, 0, t)[:, None, None]      # (N,1,1)
     matched = jnp.take_along_axis(col, idx.astype(jnp.int32), axis=2)[:, :, 0]
-    return matched & (lens <= t)[:, None]
+    return matched & (lens <= t)[:, None] & (t_lens >= 0)[None, :]

@@ -7,17 +7,24 @@ reachability DP over (log-block x template-block) tiles:
     col[i] <- prev[i-1] & (log_i == t_j)     (literal t_j)
     col[i] <- OR_{i'<i} prev[i']             (t_j == '*', absorbs >= 1)
 
-Each template position is one branch-free VPU update over the whole
-(BN, T+1) column tile, so a tile costs O(BK * Tt) vector ops — the same
-work the trie does, but data-parallel over BN logs and with zero control
-flow divergence. PAD tokens (id 0) can never equal a template literal
-(ids >= 2), so no per-position masking is needed: correctness only
-requires reading the column at exactly i = len(log).
+The kernel carries the DP columns of ALL BK templates at once as one
+(BN, BK, T+1) tile and advances every template by one token per step:
+each of the Tt steps is a single branch-free VPU update (cumsum + shift
++ compare + select) over the whole tile, instead of the BK serialized
+per-template passes of the naive formulation — the template axis is data
+parallelism, not a loop. Templates shorter than Tt freeze their column
+via the ``j < t_len`` select; a ``t_len < 0`` sentinel (padding rows,
+over-length templates from ``ops.pack_templates``) matches nothing.
+
+PAD tokens (id 0) can never equal a template literal (ids >= 2), so no
+per-position masking is needed: correctness only requires reading the
+column at exactly i = len(log).
 
 Outputs int8 {0,1} (TPU has no bool memory type); ops.py exposes bool.
 
-VMEM per program (BN=256, BK=8, T=128, Tt=64):
-  logs 128 KiB + templates 2 KiB + col (256x129 int8) 32 KiB + out 2 KiB.
+VMEM per program (BN=256, BK=8, T=128):
+  logs 128 KiB + templates + the (BN, BK, T+1) int32 column tile ~1 MiB
+  + one (BN, BK, T) compare tile ~1 MiB — well inside ~16 MiB/core.
 """
 
 from __future__ import annotations
@@ -43,35 +50,29 @@ def _match_kernel(logs_ref, lens_ref, tmpl_ref, tlen_ref, out_ref):
     bn, t = logs.shape
     bk, tt = tmpl.shape
 
-    pos = jax.lax.broadcasted_iota(jnp.int32, (bn, t + 1), 1)
-    at_len = pos == lens[:, None]   # one-hot of len(log) per row
+    def per_token(j, col):          # col: (BN, BK, T+1) int32 reachability
+        tj = tmpl[:, j]                                   # (BK,)
+        is_star = (tj == STAR_ID)[None, :, None]
+        # star: prefix-OR then shift right by one (absorbs >= 1 token)
+        run = jnp.minimum(jnp.cumsum(col, axis=2), 1)
+        zero = jnp.zeros((bn, bk, 1), col.dtype)
+        star_col = jnp.concatenate([zero, run[:, :, :-1]], axis=2)
+        # literal: advance where the log token equals this template token
+        lit = (logs[:, None, :] == tj[None, :, None]).astype(col.dtype)  # (BN, BK, T)
+        lit_col = jnp.concatenate([zero, col[:, :, :-1] * lit], axis=2)
+        new = jnp.where(is_star, star_col, lit_col)
+        active = (j < tlens)[None, :, None]               # template still has tokens
+        return jnp.where(active, new, col)
 
-    def per_template(k, out):
-        tlen = tlens[k]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bn, bk, t + 1), 2)
+    col0 = (pos == 0).astype(jnp.int32)
+    col = jax.lax.fori_loop(0, tt, per_token, col0)
 
-        def per_token(j, col):
-            tj = tmpl[k, j]
-            is_star = tj == STAR_ID
-            # prefix-OR then shift right by one (star absorbs >= 1 token)
-            run = jnp.cumsum(col, axis=1)
-            run = jnp.minimum(run, 1)
-            star_col = jnp.concatenate([jnp.zeros((bn, 1), col.dtype), run[:, :-1]], axis=1)
-            lit = (logs == tj).astype(col.dtype)
-            lit_col = jnp.concatenate([jnp.zeros((bn, 1), col.dtype), col[:, :-1] * lit], axis=1)
-            new = jnp.where(is_star, star_col, lit_col)
-            return jnp.where(j < tlen, new, col)
-
-        col0 = jnp.concatenate(
-            [jnp.ones((bn, 1), jnp.int32), jnp.zeros((bn, t), jnp.int32)], axis=1
-        )
-        col = jax.lax.fori_loop(0, tt, per_token, col0)
-        hit = (col * at_len.astype(col.dtype)).sum(axis=1)  # col[i = len]
-        hit = hit * (lens <= t).astype(col.dtype)
-        return out.at[:, k].set(hit.astype(jnp.int8))
-
-    out_ref[...] = jax.lax.fori_loop(
-        0, bk, per_template, jnp.zeros(out_ref.shape, jnp.int8)
-    )
+    at_len = (pos == lens[:, None, None]).astype(jnp.int32)
+    hit = (col * at_len).sum(axis=2)                      # col[i = len(log)]
+    hit = hit * (lens <= t).astype(jnp.int32)[:, None]    # truncated lines: no match
+    hit = hit * (tlens >= 0).astype(jnp.int32)[None, :]   # sentinel templates: no match
+    out_ref[...] = hit.astype(jnp.int8)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -85,8 +86,8 @@ def wildcard_match(
 ) -> jnp.ndarray:
     """(N,T),(N,) x (K,Tt),(K,) int32 -> (N, K) int8 {0,1} match matrix.
 
-    Padded templates must carry t_len = -1 so they match nothing
-    (ops.py handles this).
+    Templates with ``t_len < 0`` (grid padding, over-length sentinels
+    from ``ops.pack_templates``) match nothing.
     """
     n, t = logs.shape
     k, tt = templates.shape

@@ -1,0 +1,153 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container image this repo targets has no ``hypothesis`` wheel, and
+dependencies must not be installed ad hoc, so ``conftest.py`` registers
+this module as ``hypothesis`` / ``hypothesis.strategies`` when the real
+package is missing. It implements exactly the surface the test-suite
+uses (``given``, ``settings``, ``integers``, ``lists``, ``text``,
+``characters``, ``one_of``, ``just``, ``.map``, ``.filter``) as a
+deterministic seeded random sampler: no shrinking, no database, but the
+same property checks run over a few hundred examples. With the real
+hypothesis installed this module is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import unicodedata
+
+_DEFAULT_EXAMPLES = 100
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f) -> "Strategy":
+        return Strategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred) -> "Strategy":
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate rejected 1000 consecutive examples")
+
+        return Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def one_of(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: rng.choice(strategies)._draw(rng))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements._draw(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+def characters(blacklist_categories: tuple = ()) -> Strategy:
+    black = tuple(blacklist_categories)
+
+    def draw(rng):
+        while True:
+            # bias toward ASCII (incl. delimiters/controls) but keep some
+            # astral-plane coverage
+            r = rng.random()
+            if r < 0.7:
+                cp = rng.randint(0, 0x7F)
+            elif r < 0.9:
+                cp = rng.randint(0x80, 0x2FFF)
+            else:
+                cp = rng.randint(0x3000, 0x10FFFF)
+            ch = chr(cp)
+            cat = unicodedata.category(ch)
+            if cat == "Cs":  # never emit lone surrogates (unencodable)
+                continue
+            if cat in black:
+                continue
+            return ch
+
+    return Strategy(draw)
+
+
+def text(alphabet: Strategy | str | None = None, min_size: int = 0, max_size: int = 10) -> Strategy:
+    if alphabet is None:
+        alphabet = characters()
+    if isinstance(alphabet, str):
+        chars = alphabet
+        alphabet = Strategy(lambda rng: rng.choice(chars))
+
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(alphabet._draw(rng) for _ in range(n))
+
+    return Strategy(draw)
+
+
+def given(*strategies: Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
+                drawn = tuple(s._draw(rng) for s in strategies)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except BaseException:
+                    print(f"falsifying example ({fn.__name__}, run {i}): {drawn!r}",
+                          file=sys.stderr)
+                    raise
+
+        wrapper._hyp_max_examples = _DEFAULT_EXAMPLES
+        # mimic hypothesis's marker; plugins (anyio) reach for .inner_test
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # hide the drawn parameters from pytest's fixture resolution
+        # (functools.wraps leaks the inner signature via __wrapped__)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int | None = None, deadline=None, **_kw):
+    def deco(fn):
+        if max_examples is not None and hasattr(fn, "_hyp_max_examples"):
+            fn._hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``.strategies``) in
+    ``sys.modules``. Called by conftest only when the real package is
+    absent."""
+    this = sys.modules[__name__]
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = this
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = this

@@ -5,6 +5,13 @@ subprocesses (test_multidevice.py) so the device count is per-process."""
 import numpy as np
 import pytest
 
+try:  # the container image has no hypothesis wheel; use the local fallback
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
 
 @pytest.fixture(scope="session")
 def spark_lines():

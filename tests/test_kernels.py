@@ -82,3 +82,78 @@ def test_kernel_agrees_with_core_matcher():
 def test_pack_templates_empty():
     m, l = ops.pack_templates([])
     assert m.shape[0] == 0 and l.shape == (0,)
+
+
+# -------- restructured-kernel parity on shapes off the tile boundaries --------
+
+# wildcard_match tiles are (BN=256, BK=8); simcount (BN=128, BK=32) with
+# T padded to 32 lanes — every case here straddles at least one boundary.
+ODD_SHAPES = [(257, 33, 9, 6), (255, 31, 7, 5), (300, 128, 129, 64),
+              (513, 17, 41, 12), (1, 1, 1, 1)]
+
+
+@pytest.mark.parametrize("n,t,k,tt", ODD_SHAPES)
+def test_simcount_odd_shapes(n, t, k, tt):
+    rng = np.random.default_rng(n * 13 + tt)
+    logs, lens, tmpl, tlens = _rand_case(rng, n, t, k, tt)
+    got = np.asarray(ops.simcount(logs, tmpl))
+    want = np.asarray(simcount_ref(jnp.asarray(logs), jnp.asarray(tmpl)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,t,k,tt", ODD_SHAPES)
+def test_wildcard_match_odd_shapes(n, t, k, tt):
+    rng = np.random.default_rng(n * 31 + tt)
+    logs, lens, tmpl, tlens = _rand_case(rng, n, t, k, tt, star_rate=0.35)
+    got = np.asarray(ops.wildcard_match(logs, lens, tmpl, tlens))
+    want = np.asarray(
+        wildcard_match_ref(jnp.asarray(logs), jnp.asarray(lens), jnp.asarray(tmpl), jnp.asarray(tlens))
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pack_templates_overlength_sentinel():
+    """A template longer than t_max is marked t_len = -1 and must match
+    nothing — in the kernel AND in the oracle (host/kernel parity)."""
+    tpls = [np.array([2, 3, 4, 5, 6], np.int32), np.array([2, 1], np.int32)]
+    mat, lens = ops.pack_templates(tpls, t_max=3)
+    assert lens.tolist() == [-1, 2]
+    assert mat.shape == (2, 3)
+    rng = np.random.default_rng(5)
+    logs, llens, _, _ = _rand_case(rng, 70, 8, 1, 1)
+    got = np.asarray(ops.wildcard_match(logs, llens, mat, lens))
+    want = np.asarray(
+        wildcard_match_ref(jnp.asarray(logs), jnp.asarray(llens), jnp.asarray(mat), jnp.asarray(lens))
+    )
+    np.testing.assert_array_equal(got, want)
+    assert not got[:, 0].any(), "over-length template must match nothing"
+
+
+def test_pack_templates_exact_fit_keeps_length():
+    mat, lens = ops.pack_templates([np.array([2, 3, 4], np.int32)], t_max=3)
+    assert lens.tolist() == [3]
+
+
+def test_bucketed_kernel_path_matches_numpy():
+    """First-token bucketing in the kernel path: same assignment as the
+    (bucketed) numpy path, including star-first and empty templates."""
+    rng = np.random.default_rng(11)
+    logs, lens, tmpl, tlens = _rand_case(rng, 600, 12, 11, 6, star_rate=0.4)
+    templates = [tmpl[i, : tlens[i]].copy() for i in range(len(tlens))]
+    templates.append(np.zeros((0,), np.int32))  # empty template: matches nothing
+    templates.append(np.array([1, 1], np.int32))  # star-first
+    a_np = match_first(logs, lens, templates, use_kernel=False)
+    a_k = match_first(logs, lens, templates, use_kernel=True)
+    np.testing.assert_array_equal(a_np, a_k)
+
+
+def test_match_first_dedup_rows_identical():
+    """Row-dedup inside match_first must not change any assignment."""
+    rng = np.random.default_rng(17)
+    logs, lens, tmpl, tlens = _rand_case(rng, 200, 10, 5, 5)
+    logs = np.tile(logs, (4, 1))[: 700]
+    lens = np.tile(lens, 4)[: 700]
+    templates = [tmpl[i, : tlens[i]].copy() for i in range(len(tlens))]
+    a_dd = match_first(logs, lens, templates, dedup=True)
+    a_no = match_first(logs, lens, templates, dedup=False)
+    np.testing.assert_array_equal(a_dd, a_no)

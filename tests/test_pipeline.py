@@ -82,3 +82,78 @@ def test_prefetch_straggler(shard_dir):
     assert len(served) == len(files)
     assert pl.stats["straggler_requeues"] >= 1  # the stall was observed
     assert pl.stats["served"] == len(files)
+
+
+def test_prefetch_lost_shard_is_requeued_and_recovered(shard_dir):
+    """A genuinely lost attempt (reader blocks forever on first try) must
+    be re-put into pending and served by a retry — the iterator may not
+    stall, and the stuck shard must still be delivered exactly once."""
+    import threading
+
+    files = [os.path.join(shard_dir, f) for f in sorted(os.listdir(shard_dir)) if f.endswith(".lzj")]
+    never = threading.Event()
+    state = {"first": True}
+
+    def lost_reader(path):
+        if state["first"]:
+            state["first"] = False
+            never.wait(10.0)  # simulates a hung host; retries are fast
+        return read_shard(path, "bytes")
+
+    pl = PrefetchLoader(files, lost_reader, depth=2, workers=2, straggler_timeout=0.15)
+    served = list(pl)
+    never.set()
+    pl.close()
+    assert sorted(p for p, _ in served) == sorted(files)  # all shards, once each
+    assert pl.stats["straggler_requeues"] >= 1
+    assert pl.stats["served"] == len(files)
+
+
+def test_prefetch_duplicate_paths_terminate(shard_dir):
+    """Repeated entries in the path list must not stall the iterator."""
+    files = [os.path.join(shard_dir, f) for f in sorted(os.listdir(shard_dir)) if f.endswith(".lzj")]
+    pl = PrefetchLoader(files + files[:1], lambda p: read_shard(p, "bytes"),
+                        depth=2, workers=2, straggler_timeout=0.5)
+    served = list(pl)
+    pl.close()
+    assert sorted(p for p, _ in served) == sorted(files)
+
+
+def test_prefetch_hang_then_raise_recovered_by_retry(shard_dir):
+    """A reader that hangs past the timeout and THEN raises must not abort
+    the iteration: the requeued retry serves the shard."""
+    files = [os.path.join(shard_dir, f) for f in sorted(os.listdir(shard_dir)) if f.endswith(".lzj")]
+    state = {"first": True}
+
+    def hang_then_raise(path):
+        if state["first"]:
+            state["first"] = False
+            time.sleep(0.4)  # past the straggler timeout -> requeued
+            raise IOError("socket timed out")
+        return read_shard(path, "bytes")
+
+    pl = PrefetchLoader(files, hang_then_raise, depth=2, workers=2, straggler_timeout=0.15)
+    served = list(pl)
+    pl.close()
+    assert sorted(p for p, _ in served) == sorted(files)
+    assert pl.stats["straggler_requeues"] >= 1
+
+
+def test_prefetch_exhausted_retries_raises(shard_dir):
+    """If every attempt on a shard hangs, bounded retries end in an error
+    instead of an infinite stall."""
+    import threading
+
+    files = [os.path.join(shard_dir, f) for f in sorted(os.listdir(shard_dir)) if f.endswith(".lzj")][:1]
+    never = threading.Event()
+
+    def hung_reader(path):
+        never.wait(30.0)
+        return []
+
+    pl = PrefetchLoader(files, hung_reader, depth=2, workers=2,
+                        straggler_timeout=0.1, max_requeues=2)
+    with pytest.raises(RuntimeError, match="lost"):
+        list(pl)
+    never.set()
+    pl.close()

@@ -1,0 +1,35 @@
+"""The throughput benchmark must emit a complete, self-consistent report
+(this is the artifact CI uploads and the perf trajectory every PR extends)."""
+
+import json
+
+from benchmarks.throughput import bench_one, run
+from repro.core.codec import LogzipConfig
+from repro.core.ise import ISEConfig
+from repro.data.loggen import DATASETS, generate_lines
+
+REQUIRED_STAGES = {"parse", "tokenize", "encode", "columns", "kernel", "pack"}
+
+
+def test_bench_one_fields(spark_lines):
+    cfg = LogzipConfig(level=3, kernel="gzip", format=DATASETS["Spark"]["format"],
+                       ise=ISEConfig(min_sample=100, max_iters=2))
+    row = bench_one(spark_lines[:600], cfg, "spark-600")
+    assert row["lines_per_sec"] > 0 and row["mb_per_sec"] > 0
+    assert row["compression_ratio"] > 1
+    assert REQUIRED_STAGES <= set(row["stages_s"])
+    assert any(k.startswith("ise.") for k in row["stages_s"])  # ISE/match recorded
+    # the breakdown must account for most of the wall time
+    assert sum(row["stages_s"].values()) <= row["wall_s"] * 1.05
+    assert sum(row["stages_s"].values()) >= row["wall_s"] * 0.5
+
+
+def test_report_shape_and_json_serializable():
+    report = run(n_lines=800)
+    blob = json.dumps(report)  # must be JSON-clean for the CI artifact
+    assert "results" in report and len(report["results"]) == 3
+    labels = [r["label"] for r in report["results"]]
+    assert any("nodedup" in l for l in labels)
+    assert any("dupheavy" in l for l in labels)
+    assert report["seed_reference"]["lines_per_sec"] > 0
+    assert len(blob) > 200
