@@ -41,6 +41,11 @@ def main() -> None:
     _emit("Compress throughput (BENCH_compress.json; per-stage breakdown in the file)",
           [{k: r[k] for k in ("label", "lines_per_sec", "mb_per_sec", "compression_ratio")}
            for r in report["results"]])
+    s = report["streaming"]
+    _emit("Streaming session (shared-store chunked vs independent vs single)",
+          [{k: s[k] for k in ("chunk_lines", "cr_single", "cr_chunked", "cr_streaming",
+                              "cr_gap_closed", "streaming_lines_per_sec",
+                              "throughput_vs_chunked")}])
     _emit("Table II — compression ratio (synthetic corpora; orderings are the target)",
           compression.table2(n))
     _emit("Fig 6 — compressed MB by logzip level (gzip kernel)",

@@ -9,7 +9,11 @@ encode / ise.cluster / ise.match / spans / columns / pack / kernel), on:
 - the same corpus with the dedup fast path disabled (ablation);
 - a duplicate-heavy variant (each distinct line repeated ~10x, the
   regime real logs live in — LogShrink/LogLite's observation) where the
-  dedup stage collapses most of the work.
+  dedup stage collapses most of the work;
+- a streaming-session scenario (``bench_streaming``): single-archive vs
+  per-chunk-independent vs shared-store ``StreamingCompressor`` CR (the
+  session must close >= half the chunking CR gap), plus a footer-index
+  random-access check (a 1k-line range decodes only covering chunks).
 
 ``SEED_REFERENCE`` is the seed-tree measurement of the same 40k-line
 HDFS / level-3 / gzip configuration in this container, recorded when the
@@ -50,7 +54,8 @@ def _dup_heavy(name: str, n_lines: int, factor: int = 10, seed: int = 0) -> list
     return [lines[i] for i in order]
 
 
-def bench_one(lines: list[str], cfg: LogzipConfig, label: str, *, verify: bool = True) -> dict:
+def bench_one(lines: list[str], cfg: LogzipConfig, label: str, *, verify: bool = True,
+              scenario: str | None = None) -> dict:
     raw_bytes = sum(len(l.encode("utf-8", "surrogateescape")) + 1 for l in lines) - 1
     stages: dict[str, float] = {}
     t0 = time.perf_counter()
@@ -60,6 +65,7 @@ def bench_one(lines: list[str], cfg: LogzipConfig, label: str, *, verify: bool =
         assert decompress(blob) == lines, f"{label}: lossless round-trip FAILED"
     return {
         "label": label,
+        "scenario": scenario,
         "n_lines": len(lines),
         "raw_mb": raw_bytes / 1e6,
         "level": cfg.level,
@@ -74,6 +80,69 @@ def bench_one(lines: list[str], cfg: LogzipConfig, label: str, *, verify: bool =
     }
 
 
+def bench_streaming(lines: list[str], cfg: LogzipConfig, cr_single: float,
+                    chunk_lines: int) -> dict:
+    """Streaming-session scenario (ISSUE 2 acceptance): shared-store
+    chunked compression must close >= half the CR gap between
+    per-chunk-independent and single-archive compression, within 10% of
+    the chunked path's lines/sec; random access must decode only the
+    chunks covering the requested range."""
+    import io
+
+    from repro.core.parallel import compress_parallel, decompress_parallel
+    from repro.core.stream import LZJSReader, StreamingCompressor
+
+    n = len(lines)
+    raw_bytes = sum(len(l.encode("utf-8", "surrogateescape")) + 1 for l in lines) - 1
+
+    t0 = time.perf_counter()
+    chunked = compress_parallel(lines, cfg, n_workers=1, chunk_lines=chunk_lines)
+    wall_chunked = time.perf_counter() - t0
+    assert decompress_parallel(chunked) == lines, "chunked round-trip FAILED"
+
+    buf = io.BytesIO()
+    t0 = time.perf_counter()
+    with StreamingCompressor(buf, cfg, chunk_lines=chunk_lines) as sc:
+        sc.feed(lines)
+        summary = sc.close()
+    wall_stream = time.perf_counter() - t0
+    blob = buf.getvalue()
+
+    rd = LZJSReader(io.BytesIO(blob))
+    assert rd.read_all() == lines, "streaming round-trip FAILED"
+
+    # random access: a 1k-line range must only decode covering chunks
+    # (start clamped so tiny --lines runs still verify a non-empty range)
+    start = min(n // 2 + 137, max(n - 1, 0))
+    count = min(1000, n - start)
+    rd2 = LZJSReader(io.BytesIO(blob))
+    got = rd2.read_range(start, count)
+    covering = rd2.covering_chunks(start, count)
+    ra_ok = (count > 0 and got == lines[start:start + count]
+             and rd2.chunks_decoded == len(covering))
+
+    cr_chunked = raw_bytes / len(chunked)
+    cr_stream = raw_bytes / len(blob)
+    gap = cr_single - cr_chunked
+    return {
+        "chunk_lines": chunk_lines,
+        "n_chunks": summary["n_chunks"],
+        "n_templates": summary["n_templates"],
+        "cr_single": round(cr_single, 3),
+        "cr_chunked": round(cr_chunked, 3),
+        "cr_streaming": round(cr_stream, 3),
+        "cr_gap_closed": round((cr_stream - cr_chunked) / gap, 3) if gap > 0 else 1.0,
+        "chunked_lines_per_sec": round(n / wall_chunked, 1),
+        "streaming_lines_per_sec": round(n / wall_stream, 1),
+        "throughput_vs_chunked": round(wall_chunked / wall_stream, 3),
+        "random_access": {
+            "start": start, "count": count,
+            "chunks_total": len(rd2), "chunks_covering": len(covering),
+            "chunks_decoded": rd2.chunks_decoded, "ok": bool(ra_ok),
+        },
+    }
+
+
 def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
     from repro.data.loggen import DATASETS
 
@@ -83,11 +152,14 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
 
     lines = list(generate_lines(dataset, n_lines, seed=0))
     results = [
-        bench_one(lines, cfg, f"{dataset}-{n_lines}"),
-        bench_one(lines, cfg_nodedup, f"{dataset}-{n_lines}-nodedup"),
-        bench_one(_dup_heavy(dataset, n_lines), cfg, f"{dataset}-{n_lines}-dupheavy"),
+        bench_one(lines, cfg, f"{dataset}-{n_lines}", scenario="main"),
+        bench_one(lines, cfg_nodedup, f"{dataset}-{n_lines}-nodedup", scenario="nodedup"),
+        bench_one(_dup_heavy(dataset, n_lines), cfg, f"{dataset}-{n_lines}-dupheavy",
+                  scenario="dupheavy"),
     ]
     fast = results[0]
+    streaming = bench_streaming(lines, cfg, fast["compression_ratio"],
+                                chunk_lines=max(500, n_lines // 20))
     report = {
         "benchmark": "compress_throughput",
         "host": {"platform": platform.platform(), "python": platform.python_version()},
@@ -96,6 +168,7 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
         "speedup_vs_seed": round(fast["lines_per_sec"] / SEED_REFERENCE["lines_per_sec"], 2)
         if n_lines == 40000 and dataset == "HDFS" else None,
         "results": results,
+        "streaming": streaming,
     }
     return report
 
@@ -127,6 +200,16 @@ def main() -> None:
     if report["speedup_vs_seed"]:
         print(f"speedup vs seed ({SEED_REFERENCE['lines_per_sec']:.0f} lines/s): "
               f"{report['speedup_vs_seed']:.2f}x")
+    s = report["streaming"]
+    print(f"streaming ({s['n_chunks']} chunks x {s['chunk_lines']} lines): "
+          f"CR {s['cr_streaming']:.2f} vs chunked {s['cr_chunked']:.2f} / "
+          f"single {s['cr_single']:.2f} -> gap closed {s['cr_gap_closed']:.0%}; "
+          f"{s['streaming_lines_per_sec']:.0f} lines/s "
+          f"({s['throughput_vs_chunked']:.2f}x chunked)")
+    ra = s["random_access"]
+    print(f"random access [{ra['start']}:{ra['start']+ra['count']}]: decoded "
+          f"{ra['chunks_decoded']}/{ra['chunks_total']} chunks "
+          f"(covering {ra['chunks_covering']}) ok={ra['ok']}")
     print(f"wrote {out}")
 
 

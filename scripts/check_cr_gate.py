@@ -1,0 +1,98 @@
+"""Compression-ratio regression gate for CI (ISSUE 2 satellite).
+
+Compares a freshly-measured throughput report against the committed
+``BENCH_compress.json`` trajectory artifact:
+
+- per-scenario CR (main / nodedup / dupheavy) must stay above
+  ``--cr-slack`` x the recorded CR. The smoke job runs quick sizes (4k
+  lines vs the recorded 40k), and CR grows with corpus size, so the
+  slack is generous by design — this gate catches *gross* regressions
+  (a broken dictionary, verbatim fallback swallowing everything), not
+  single-percent drift;
+- the streaming scenario must close at least ``--gap-min`` of the
+  chunking CR gap and its random-access check must have decoded only
+  covering chunks;
+- streaming throughput must stay within ``--throughput-min`` x of the
+  per-chunk-independent path.
+
+Exit code 1 with a per-check report on any violation.
+
+    PYTHONPATH=src python scripts/check_cr_gate.py \
+        --report BENCH_compress.quick.json --baseline BENCH_compress.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", required=True, help="fresh run (e.g. quick smoke)")
+    ap.add_argument("--baseline", required=True, help="committed BENCH_compress.json")
+    ap.add_argument("--cr-slack", type=float, default=0.55,
+                    help="fresh CR must be >= slack * recorded CR per scenario "
+                         "(quick runs use smaller corpora, so CR is lower)")
+    ap.add_argument("--gap-min", type=float, default=0.4,
+                    help="minimum fraction of the chunking CR gap the streaming "
+                         "session must close (acceptance target at 40k is 0.5; "
+                         "quick sizes get a little slack)")
+    ap.add_argument("--throughput-min", type=float, default=0.8,
+                    help="streaming lines/sec floor relative to the chunked path "
+                         "(acceptance target is 0.9; CI machines are noisy)")
+    args = ap.parse_args()
+
+    with open(args.report) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures: list[str] = []
+    checks: list[str] = []
+
+    base_by_scenario = {r.get("scenario"): r for r in base["results"] if r.get("scenario")}
+    for r in fresh["results"]:
+        sc = r.get("scenario")
+        b = base_by_scenario.get(sc)
+        if b is None:
+            continue
+        floor = args.cr_slack * b["compression_ratio"]
+        line = (f"CR[{sc}]: fresh {r['compression_ratio']:.2f} vs recorded "
+                f"{b['compression_ratio']:.2f} (floor {floor:.2f})")
+        checks.append(line)
+        if r["compression_ratio"] < floor:
+            failures.append(line)
+
+    s = fresh.get("streaming")
+    if s is None:
+        failures.append("streaming scenario missing from fresh report")
+    else:
+        line = f"streaming gap closed: {s['cr_gap_closed']:.2f} (min {args.gap_min})"
+        checks.append(line)
+        if s["cr_gap_closed"] < args.gap_min:
+            failures.append(line)
+        line = (f"streaming throughput vs chunked: {s['throughput_vs_chunked']:.2f} "
+                f"(min {args.throughput_min})")
+        checks.append(line)
+        if s["throughput_vs_chunked"] < args.throughput_min:
+            failures.append(line)
+        ra = s["random_access"]
+        line = (f"random access: decoded {ra['chunks_decoded']}/{ra['chunks_total']} "
+                f"chunks, covering {ra['chunks_covering']}, ok={ra['ok']}")
+        checks.append(line)
+        if not ra["ok"]:
+            failures.append(line)
+
+    for c in checks:
+        print(("FAIL  " if c in failures else "ok    ") + c)
+    if failures:
+        print(f"\nCR gate: {len(failures)} check(s) failed", file=sys.stderr)
+        return 1
+    print("\nCR gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

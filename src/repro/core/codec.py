@@ -6,18 +6,24 @@ Losslessness contract: ``decompress(compress(lines)) == lines`` for ANY
 list of text lines — lines that defeat the header regex or the tokenizer
 budget are routed to verbatim side channels. Property-tested.
 
+Compression runs as the staged pipeline in ``repro.core.stages``
+(parse -> dedup -> structure -> encode -> pack over a ``Chunk`` IR);
+this module keeps the public codec API plus the decode side.
+
 Layout of the final blob:
     b"LZJF" | u8 kernel_id | u8 level | kernel(container)
 where container is the object pack from ``encode.pack_container``.
+
+Session chunks (written by ``repro.core.stream``) carry
+``meta["stream"] = {base, n_delta, used}``: the ``templates`` object
+holds only this chunk's template *delta* and EventIDs are global ids
+into the session's ``TemplateStore`` — decoding needs the accumulated
+templates of earlier chunks via ``ext_templates``.
 """
 
 from __future__ import annotations
 
-import bz2
 import json
-import lzma
-import zlib
-from dataclasses import dataclass, field as dfield
 
 import numpy as np
 
@@ -25,65 +31,29 @@ from .encode import (
     ColumnCodec,
     ParamDict,
     decode_varints,
-    encode_varints,
-    esc,
-    factorize,
-    join_column,
-    pack_container,
     split_column,
     unesc,
     unpack_container,
 )
-from .ise import ISEConfig, iterative_structure_extraction
-from .match import extract_spans
-from .timing import StageTimer
-from .tokenizer import STAR_ID, LogFormat, Vocab, tokenize
+from .stages import (
+    FILE_MAGIC,
+    KERNEL_BY_ID,
+    KERNELS,
+    WILDCARD_MARK,
+    LogzipConfig,
+    run_pipeline,
+)
 
-FILE_MAGIC = b"LZJF"
-WILDCARD_MARK = "\x02"
+_KERNEL_BY_ID = KERNEL_BY_ID  # back-compat alias
 
-KERNELS: dict[str, tuple[int, object, object]] = {
-    "gzip": (0, lambda b: zlib.compress(b, 6), zlib.decompress),
-    "bzip2": (1, lambda b: bz2.compress(b, 9), bz2.decompress),
-    "lzma": (2, lambda b: lzma.compress(b, preset=6), lzma.decompress),
-    "none": (3, lambda b: b, lambda b: b),
-}
-_KERNEL_BY_ID = {v[0]: k for k, v in KERNELS.items()}
-
-
-@dataclass
-class LogzipConfig:
-    level: int = 3                  # 1 | 2 | 3 (paper's levels)
-    kernel: str = "gzip"
-    format: str | None = None       # loghub format string, None = content-only
-    max_tokens: int = 128
-    ise: ISEConfig = dfield(default_factory=ISEConfig)
-    # paper §III-E: a pre-extracted TemplateStore skips ISE — new logs are
-    # matched against the stored templates (stable EventIDs across archives)
-    template_store: object = None
-    # dedup fast path: tokenize / span-extract each *distinct* content
-    # string once and fan results back out by inverse index. Byte-identical
-    # archives either way (property-tested); False only exists as the
-    # reference path for that test and for ablation benchmarks.
-    dedup: bool = True
-
-
-# ----------------------------------------------------------------- helpers
-
-def _serialize_template(tokens: list[str]) -> str:
-    return "\x00".join(WILDCARD_MARK if t is None else esc(t) for t in tokens)
+__all__ = [
+    "FILE_MAGIC", "KERNELS", "LogzipConfig", "compress", "decompress",
+    "open_container", "read_structured", "compress_file", "decompress_file",
+]
 
 
 def _deserialize_template(s: str) -> list[str | None]:
     return [None if t == WILDCARD_MARK else unesc(t) for t in s.split("\x00")]
-
-
-def _param_substring(tokens: list[str], delims: list[str], s: int, e: int) -> str:
-    out = [tokens[s]]
-    for i in range(s + 1, e):
-        out.append(delims[i])
-        out.append(tokens[i])
-    return "".join(out)
 
 
 # ----------------------------------------------------------------- compress
@@ -94,230 +64,58 @@ def compress(
     *,
     stage_times: dict | None = None,
 ) -> bytes:
-    """Compress ``lines`` -> archive blob.
+    """Compress ``lines`` -> archive blob (staged pipeline, batch mode).
 
     ``stage_times``: optional dict that receives a per-stage wall-time
     breakdown (parse / dedup / tokenize / encode / ise.* / spans /
     columns / pack / kernel) — consumed by ``benchmarks/throughput.py``.
     """
-    cfg = cfg or LogzipConfig()
-    if cfg.level not in (1, 2, 3):
-        raise ValueError("level must be 1, 2 or 3")
-    tm = StageTimer(stage_times)
-    objects: dict[str, bytes] = {}
-    meta: dict = {"v": 1, "level": cfg.level, "n": len(lines), "format": cfg.format}
-
-    with tm("parse"):
-        fmt = LogFormat(cfg.format) if cfg.format else None
-        if fmt is not None:
-            columns, ok_idx, bad_idx = fmt.parse(lines)
-            contents = columns[fmt.content_field]
-            meta["fields"] = fmt.fields
-        else:
-            columns, ok_idx, bad_idx = {}, list(range(len(lines))), []
-            contents = list(lines)
-
-    # verbatim channel for format-parse failures
-    objects["raw.idx"] = encode_varints(np.diff(np.array([-1] + bad_idx)))
-    objects["raw.txt"] = join_column([lines[i] for i in bad_idx])
-
-    # Level 1: header field columns, sub-field split
-    with tm("columns"):
-        for f in (fmt.fields if fmt else []):
-            if f == fmt.content_field:
-                continue
-            objects.update(ColumnCodec(f"h.{f}").encode(columns[f]))
-
-    if cfg.level == 1:
-        objects["content.txt"] = join_column(contents)
-    else:
-        _encode_content(objects, meta, contents, columns, cfg, tm)
-
-    objects["meta"] = json.dumps(meta).encode("utf-8")
-    with tm("pack"):
-        container = pack_container(objects)
-    kid, comp, _ = KERNELS[cfg.kernel]
-    with tm("kernel"):
-        blob = comp(container)
-    return FILE_MAGIC + bytes([kid, cfg.level]) + blob
-
-
-def _encode_content(objects, meta, contents: list[str], columns, cfg: LogzipConfig,
-                    tm: StageTimer) -> None:
-    """Levels 2/3: ISE + per-template columnar parameter objects.
-
-    Dedup-aware fast path: content strings are unique-ified up front
-    (``cfg.dedup``); tokenization, vocab interning, span extraction and
-    the per-line string assembly all run once per *distinct* content and
-    are fanned back out through the inverse index. ISE itself always sees
-    the full per-line arrays (sampling is defined over lines), so the
-    archive bytes are identical with the fast path on or off.
-    """
-    n = len(contents)
-    with tm("dedup"):
-        if cfg.dedup:
-            inverse, uniq = factorize(contents)
-        else:
-            inverse, uniq = np.arange(n, dtype=np.int64), list(contents)
-
-    with tm("tokenize"):
-        tok_u: list[list[str]] = []
-        delim_u: list[list[str]] = []
-        for c in uniq:
-            t, d = tokenize(c)
-            tok_u.append(t)
-            delim_u.append(d)
-
-    with tm("encode"):
-        vocab = Vocab()
-        ids_u, lens_u = vocab.encode_batch(tok_u, cfg.max_tokens, tight=True)
-        ids = ids_u[inverse]
-        lens = lens_u[inverse]
-        levels = factorize(columns["Level"])[0] if "Level" in columns else None
-        comps = factorize(columns["Component"])[0] if "Component" in columns else None
-
-    if cfg.template_store is not None:
-        from .ise import ISEResult
-        from .match import match_first
-
-        tpl_ids = cfg.template_store.to_id_arrays(vocab)
-        with tm("ise.match"):
-            a = match_first(ids, lens, tpl_ids, use_kernel=cfg.ise.use_kernel)
-        res = ISEResult(tpl_ids, a, [float((a >= 0).mean())], [])
-        meta["template_store"] = True
-    else:
-        res = iterative_structure_extraction(ids, lens, levels, comps, len(vocab),
-                                             cfg.ise, stage_times=tm.sink)
-    assign = res.assign.copy()
-    assign[lens > cfg.max_tokens] = -1  # over-budget lines go verbatim
-
-    # verbatim channel for unmatched content (indices within the ok-lines)
-    un_pos = np.nonzero(assign < 0)[0]
-    objects["cun.idx"] = encode_varints(np.diff(np.concatenate([[-1], un_pos])))
-    objects["cun.txt"] = join_column([contents[i] for i in un_pos])
-
-    # compact remap of used templates — UNLESS a shared TemplateStore is
-    # in play: downstream consumers key on the store's global EventIDs,
-    # so those are written as-is (unused templates cost a few bytes)
-    if cfg.template_store is not None:
-        used = list(range(len(res.templates)))
-    else:
-        used = sorted(set(int(a) for a in assign if a >= 0))
-    remap = {g: k for k, g in enumerate(used)}
-    meta["n_templates"] = len(used)
-    meta["match_rate"] = res.match_rate
-
-    tser: list[str] = []
-    for g in used:
-        if cfg.template_store is not None:
-            # store literals may be absent from THIS corpus's vocab —
-            # serialize from the store's own strings
-            toks = list(cfg.template_store.templates[g])
-        else:
-            toks = [None if int(t) == STAR_ID else vocab.token(int(t)) for t in res.templates[g]]
-        tser.append(_serialize_template(toks))
-    objects["templates"] = join_column(tser)
-
-    matched = np.nonzero(assign >= 0)[0]
-    remap_arr = np.full(len(res.templates), -1, np.int64)
-    remap_arr[np.asarray(used, np.int64)] = np.arange(len(used))
-    objects["events"] = encode_varints(remap_arr[assign[matched]])
-
-    vocab_arr = np.array([vocab.token(i) for i in range(len(vocab))], dtype=object)
-    paradict = ParamDict() if cfg.level >= 3 else None
-    for g in used:
-        k = remap[g]
-        tpl = res.templates[g]
-        line_idx = np.nonzero(assign == g)[0]
-        with tm("spans"):
-            star_cols, pat_list, pat_ids = _template_params(
-                tpl, line_idx, inverse, ids_u, lens_u, tok_u, delim_u, vocab_arr)
-        with tm("columns"):
-            for s, col in enumerate(star_cols):
-                objects.update(ColumnCodec(f"t{k}.v{s}", paradict).encode(col))
-            objects[f"t{k}.gap.pat"] = join_column(pat_list)
-            objects[f"t{k}.gap.pid"] = encode_varints(pat_ids)
-
-    if paradict is not None:
-        objects["paradict"] = paradict.encode()
-
-
-def _template_params(tpl, line_idx, inverse, ids_u, lens_u, tok_u, delim_u, vocab_arr):
-    """Star-value columns + gap-pattern dictionary for one template.
-
-    All heavy work runs once per distinct content: spans are extracted on
-    the unique rows, star substrings come from one vectorized vocab
-    lookup (single-token spans, the common case) or a per-unique join,
-    and gap patterns are memoized on (delims, span widths) — identical to
-    walking every line, because the gap sequence is a pure function of
-    that key for a fixed template.
-    """
-    u_lines = inverse[line_idx]
-    uu_inv, uu = factorize(u_lines)  # uniques in first-line-occurrence order
-    uu_arr = np.asarray(uu, np.int64)
-    spans_u = extract_spans(ids_u[uu_arr], lens_u[uu_arr], tpl)
-    n_uu, n_stars = spans_u.shape[:2]
-    widths = spans_u[:, :, 1] - spans_u[:, :, 0]
-
-    ustar = np.empty((n_uu, n_stars), dtype=object)
-    for si in range(n_stars):
-        single = widths[:, si] == 1
-        if single.any():
-            rows = np.nonzero(single)[0]
-            ustar[rows, si] = vocab_arr[ids_u[uu_arr[rows], spans_u[rows, si, 0]]]
-        for r in np.nonzero(~single)[0]:
-            u = uu[r]
-            ustar[r, si] = _param_substring(
-                tok_u[u], delim_u[u], int(spans_u[r, si, 0]), int(spans_u[r, si, 1]))
-
-    # gap (unit-delimiter) pattern per unique, memoized: for a fixed
-    # template the delimiter positions depend only on the star widths
-    tpl_is_star = [int(t) == STAR_ID for t in tpl]
-    gcache: dict[tuple, str] = {}
-    upat: list[str] = []
-    for r in range(n_uu):
-        delims = delim_u[uu[r]]
-        key = (widths[r].tobytes(), *delims)
-        p = gcache.get(key)
-        if p is None:
-            gaps = [delims[0]]
-            si = 0
-            pos = 0
-            for is_star in tpl_is_star:
-                if is_star:
-                    pos = int(spans_u[r, si, 1])
-                    si += 1
-                else:
-                    pos += 1
-                gaps.append(delims[pos])
-            p = "\x00".join(esc(gap) for gap in gaps)
-            gcache[key] = p
-        upat.append(p)
-
-    # intern patterns over uniques (first-occurrence order == line order)
-    pat_map: dict[str, int] = {}
-    pat_list: list[str] = []
-    upid = np.empty(n_uu, np.int64)
-    for r, p in enumerate(upat):
-        pid = pat_map.get(p)
-        if pid is None:
-            pid = len(pat_list)
-            pat_map[p] = pid
-            pat_list.append(p)
-        upid[r] = pid
-
-    star_cols = [ustar[uu_inv, si].tolist() for si in range(n_stars)]
-    return star_cols, pat_list, upid[uu_inv]
+    return run_pipeline(lines, cfg, stage_times=stage_times).blob
 
 
 # --------------------------------------------------------------- decompress
 
-def decompress(blob: bytes) -> list[str]:
-    assert blob[:4] == FILE_MAGIC, "not a logzip-jax archive"
-    kernel = _KERNEL_BY_ID[blob[4]]
-    container = KERNELS[kernel][2](blob[6:])
-    objects = unpack_container(container)
-    meta = json.loads(objects["meta"].decode("utf-8"))
+def open_container(blob: bytes) -> tuple[dict, dict]:
+    """Validate framing, run the entropy kernel, unpack -> (objects, meta).
+
+    Raises ``ValueError`` (never a bare assert) on wrong magic, unknown
+    kernel id, or a truncated/corrupt payload.
+    """
+    if len(blob) < 6 or blob[:4] != FILE_MAGIC:
+        raise ValueError(
+            f"not a logzip archive: magic {bytes(blob[:4])!r}, expected {FILE_MAGIC!r}")
+    kid = blob[4]
+    kernel = KERNEL_BY_ID.get(kid)
+    if kernel is None:
+        raise ValueError(f"unknown entropy kernel id {kid} in logzip archive")
+    try:
+        container = KERNELS[kernel][2](blob[6:])
+        objects = unpack_container(container)
+        meta = json.loads(objects["meta"].decode("utf-8"))
+    except Exception as e:
+        raise ValueError(f"truncated or corrupt logzip archive: {e}") from e
+    return objects, meta
+
+
+def decompress(blob: bytes, *, ext_templates: list | None = None,
+               ext_params: list | None = None) -> list[str]:
+    """Archive blob -> original lines.
+
+    ``ext_templates`` / ``ext_params``: accumulated global template list
+    (token tuples, None = wildcard) and ParamDict values for session
+    chunks whose EventIDs / ParaIDs reference earlier chunks; ignored
+    for self-contained archives.
+    """
+    objects, meta = open_container(blob)
+    try:
+        return _decompress_objects(objects, meta, ext_templates, ext_params)
+    except ValueError:
+        raise
+    except Exception as e:
+        raise ValueError(f"truncated or corrupt logzip archive: {e}") from e
+
+
+def _decompress_objects(objects, meta, ext_templates=None, ext_params=None) -> list[str]:
     n = meta["n"]
     level = meta["level"]
 
@@ -327,6 +125,8 @@ def decompress(blob: bytes) -> list[str]:
         out[i] = line
     ok_idx = [i for i in range(n) if out[i] is None]
 
+    from .tokenizer import LogFormat
+
     fmt = LogFormat(meta["format"]) if meta.get("format") else None
     header_cols: dict[str, list[str]] = {}
     if fmt is not None:
@@ -335,7 +135,7 @@ def decompress(blob: bytes) -> list[str]:
                 continue
             header_cols[f] = ColumnCodec(f"h.{f}").decode(objects, len(ok_idx))
 
-    contents = _decode_content(objects, meta, len(ok_idx), level)
+    contents = _decode_content(objects, meta, len(ok_idx), level, ext_templates, ext_params)
 
     for r, i in enumerate(ok_idx):
         if fmt is None:
@@ -347,7 +147,54 @@ def decompress(blob: bytes) -> list[str]:
     return out  # type: ignore[return-value]
 
 
-def _decode_content(objects, meta, n_ok: int, level: int) -> list[str]:
+def resolve_templates(objects, meta, ext_templates=None) -> list[list[str | None]]:
+    """The template list the chunk's remapped EventIDs index into.
+
+    Self-contained archives carry it whole. Session chunks carry their
+    template delta in the container record *frame* (``repro.core.stream``
+    accumulates the deltas), so decoding one needs the accumulated global
+    list via ``ext_templates``.
+    """
+    stream = meta.get("stream")
+    if stream is None:
+        if not meta.get("n_templates"):
+            return []
+        return [_deserialize_template(s) for s in split_column(objects["templates"])]
+    if ext_templates is None:
+        raise ValueError(
+            "session chunk: EventIDs are global store ids; pass ext_templates "
+            "(decode through the LZJS container reader or iter_stream)")
+    try:
+        return [list(ext_templates[g]) for g in stream["used"]]
+    except IndexError as e:
+        raise ValueError(f"ext_templates too short for session chunk: {e}") from e
+
+
+def resolve_params(objects, meta, ext_params=None) -> list[str] | None:
+    """The ParaID -> value list for a level-3 archive.
+
+    Session chunks reference the session-shared ``ParamDict`` (deltas
+    ride in the container record frames), so the accumulated value list
+    must come in via ``ext_params``."""
+    stream = meta.get("stream")
+    if stream is not None and "pd_delta" in stream:
+        pd_end = stream.get("pd_base", 0) + stream["pd_delta"]
+        if ext_params is None:
+            raise ValueError(
+                "session chunk: ParaIDs index the session ParamDict; pass "
+                "ext_params (decode through the LZJS container reader)")
+        if len(ext_params) < pd_end:
+            raise ValueError(
+                f"ext_params too short for session chunk: need {pd_end}, "
+                f"got {len(ext_params)}")
+        return list(ext_params)
+    if "paradict" in objects:
+        return ParamDict.decode(objects["paradict"])
+    return None
+
+
+def _decode_content(objects, meta, n_ok: int, level: int,
+                    ext_templates=None, ext_params=None) -> list[str]:
     if level == 1:
         return split_column(objects["content.txt"])
 
@@ -356,10 +203,10 @@ def _decode_content(objects, meta, n_ok: int, level: int) -> list[str]:
     for i, c in zip(un_idx, split_column(objects["cun.txt"])):
         contents[i] = c
 
-    templates = [_deserialize_template(s) for s in split_column(objects["templates"])] if meta.get("n_templates") else []
+    templates = resolve_templates(objects, meta, ext_templates)
     events = decode_varints(objects["events"])
 
-    paravalues = ParamDict.decode(objects["paradict"]) if level >= 3 and "paradict" in objects else None
+    paravalues = resolve_params(objects, meta, ext_params) if level >= 3 else None
 
     # per-template decoded columns + cursors
     per_tpl: dict[int, dict] = {}
@@ -405,7 +252,7 @@ def _decode_content(objects, meta, n_ok: int, level: int) -> list[str]:
 
 # ------------------------------------------------------- structured access
 
-def read_structured(blob: bytes) -> dict:
+def read_structured(blob: bytes, *, ext_templates: list | None = None) -> dict:
     """Read the level>=2 intermediate representation WITHOUT full decode.
 
     This is the paper's "structured intermediate representations ...
@@ -413,23 +260,31 @@ def read_structured(blob: bytes) -> dict:
     template strings come straight out of the archive objects (no line
     reconstruction). Used by the anomaly-detection example and the
     event-sequence data pipeline.
+
+    For session chunks the ``events`` stream is additionally mapped back
+    to the store's global ids in ``events_global`` (stable across every
+    chunk of the session), and ``stream`` carries {base, n_delta, used}.
     """
-    assert blob[:4] == FILE_MAGIC, "not a logzip-jax archive"
-    kernel = _KERNEL_BY_ID[blob[4]]
-    objects = unpack_container(KERNELS[kernel][2](blob[6:]))
-    meta = json.loads(objects["meta"].decode("utf-8"))
+    objects, meta = open_container(blob)
     if meta["level"] < 2:
         raise ValueError("structured access needs a level >= 2 archive")
     templates = [
-        " ".join("<*>" if t is None else t for t in _deserialize_template(s))
-        for s in split_column(objects["templates"])
+        " ".join("<*>" if t is None else t for t in tpl)
+        for tpl in resolve_templates(objects, meta, ext_templates)
     ]
-    return {
+    events = np.array(decode_varints(objects["events"]), np.int32)
+    out = {
         "meta": meta,
-        "events": np.array(decode_varints(objects["events"]), np.int32),
+        "events": events,
         "templates": templates,
         "match_rate": meta.get("match_rate"),
     }
+    stream = meta.get("stream")
+    if stream is not None:
+        used = np.asarray(stream["used"], np.int32)
+        out["stream"] = stream
+        out["events_global"] = used[events] if len(events) else events
+    return out
 
 
 # ----------------------------------------------------------------- file API

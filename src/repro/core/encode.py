@@ -146,11 +146,17 @@ def split_column(data: bytes) -> list[str]:
 # ---------------------------------------------------------------- ParamDict
 
 class ParamDict:
-    """Global value->ParaID dictionary shared by all groups (paper L3)."""
+    """Global value->ParaID dictionary shared by all groups (paper L3).
 
-    def __init__(self):
-        self._to_id: dict[str, int] = {}
-        self.values: list[str] = []
+    Append-only, so a streaming session can share ONE dict across chunks:
+    seed it with the accumulated values, then ``encode_delta(base)``
+    serializes only the values this chunk added — ParaIDs are global and
+    stable for the life of the session (mirrors ``TemplateStore.add``).
+    """
+
+    def __init__(self, seed: list[str] | None = None):
+        self.values: list[str] = list(seed) if seed else []
+        self._to_id: dict[str, int] = {v: i for i, v in enumerate(self.values)}
 
     def id(self, value: str) -> int:
         i = self._to_id.get(value)
@@ -162,6 +168,9 @@ class ParamDict:
 
     def encode(self) -> bytes:
         return join_column(self.values)
+
+    def encode_delta(self, base: int) -> bytes:
+        return join_column(self.values[base:])
 
     @staticmethod
     def decode(data: bytes) -> list[str]:

@@ -4,7 +4,11 @@ The file is split into chunks; each worker compresses its chunk
 independently (sampling+clustering+matching are per-chunk, so the whole
 pipeline is embarrassingly parallel — the paper's design). Chunking
 slightly hurts CR (no cross-chunk template sharing), exactly as the paper
-reports; the benchmark reproduces that curve.
+reports; ``shared_store=True`` recovers most of that loss by running ISE
+*once* over a bounded corpus sample (paper §III-E: extraction is a
+one-off) and handing every worker the same frozen ``TemplateStore`` —
+chunks then compress by matching alone, with store-global EventIDs that
+agree across all chunks.
 
 On a TPU pod the analogous parallelism is ``shard_map`` over the ``data``
 axis (see ``repro.kernels.ops.wildcard_match_sharded``) — matching is the
@@ -14,13 +18,35 @@ bulk of the work and needs no cross-shard communication.
 from __future__ import annotations
 
 import concurrent.futures as cf
-import io
 from dataclasses import replace
 
+import numpy as np
+
 from .codec import FILE_MAGIC, LogzipConfig, compress, decompress
-from .encode import pack_container, unpack_container, write_varint
+from .encode import write_varint
 
 MULTI_MAGIC = b"LZJM"
+STREAM_MAGIC = b"LZJS"  # handled by repro.core.stream; dispatched here too
+
+
+def seed_template_store(lines: list[str], cfg: LogzipConfig, max_sample: int = 8000):
+    """One-off ISE over a bounded, deterministic sample -> shared store.
+
+    The sample is an evenly-strided slice of the corpus (deterministic,
+    covers drift along the file) capped at ``max_sample`` lines, so the
+    seeding cost stays O(max_sample) regardless of corpus size.
+    """
+    from .templates import extract_templates
+
+    n = len(lines)
+    k = min(n, max_sample, max(4 * cfg.ise.min_sample,
+                               int(round(cfg.ise.sample_rate * n))))
+    if 0 < k < n:
+        idx = np.linspace(0, n - 1, k).astype(np.int64)
+        sample = [lines[int(i)] for i in idx]
+    else:
+        sample = list(lines)
+    return extract_templates(sample, cfg.format, cfg.ise)
 
 
 def _compress_chunk(args) -> bytes:
@@ -33,19 +59,31 @@ def compress_parallel(
     cfg: LogzipConfig | None = None,
     n_workers: int = 1,
     chunk_lines: int | None = None,
+    shared_store: bool = False,
 ) -> bytes:
-    """Compress with ``n_workers`` processes over line chunks."""
+    """Compress with ``n_workers`` processes over line chunks.
+
+    ``shared_store=True`` seeds one ``TemplateStore`` from a corpus
+    sample and shares it across every chunk (match-only workers,
+    cross-chunk template sharing, store-global EventIDs)."""
     cfg = cfg or LogzipConfig()
     if chunk_lines is None:
         chunk_lines = max(1, (len(lines) + n_workers - 1) // max(n_workers, 1))
     chunks = [lines[i : i + chunk_lines] for i in range(0, len(lines), chunk_lines)] or [[]]
+
+    if shared_store and cfg.level >= 2 and cfg.template_store is None and len(chunks) > 1:
+        cfg = replace(cfg, template_store=seed_template_store(lines, cfg))
 
     if n_workers <= 1 or len(chunks) == 1:
         blobs = [compress(c, cfg) for c in chunks]
     else:
         with cf.ProcessPoolExecutor(max_workers=n_workers) as ex:
             blobs = list(ex.map(_compress_chunk, [(c, cfg) for c in chunks]))
+    return frame_multi(blobs)
 
+
+def frame_multi(blobs: list[bytes]) -> bytes:
+    """Frame per-chunk archive blobs into the ``LZJM`` container."""
     out = bytearray(MULTI_MAGIC)
     write_varint(out, len(blobs))
     for b in blobs:
@@ -54,16 +92,23 @@ def compress_parallel(
     return bytes(out)
 
 
-def decompress_parallel(blob: bytes, n_workers: int = 1) -> list[str]:
-    if blob[:4] == FILE_MAGIC:  # plain single archive
-        return decompress(blob)
-    assert blob[:4] == MULTI_MAGIC, "not a logzip archive"
+def iter_multi_chunks(blob: bytes):
+    """Yield the per-chunk LZJF blobs of an ``LZJM`` container.
+
+    Raises ``ValueError`` (never a bare assert) on bad magic or a
+    truncated record."""
+    if len(blob) < 4 or blob[:4] != MULTI_MAGIC:
+        raise ValueError(
+            f"not a multi-chunk logzip archive: magic {bytes(blob[:4])!r}, "
+            f"expected {MULTI_MAGIC!r}")
     pos = 4
 
     def rd() -> int:
         nonlocal pos
         cur, shift = 0, 0
         while True:
+            if pos >= len(blob):
+                raise ValueError("truncated LZJM archive: varint runs past the end")
             b = blob[pos]
             pos += 1
             cur |= (b & 0x7F) << shift
@@ -72,12 +117,30 @@ def decompress_parallel(blob: bytes, n_workers: int = 1) -> list[str]:
             shift += 7
 
     n = rd()
-    parts = []
-    for _ in range(n):
+    for i in range(n):
         ln = rd()
-        parts.append(blob[pos : pos + ln])
+        if pos + ln > len(blob):
+            raise ValueError(
+                f"truncated LZJM archive: chunk {i} claims {ln} bytes, "
+                f"{len(blob) - pos} remain")
+        yield blob[pos : pos + ln]
         pos += ln
-    if n_workers <= 1 or n == 1:
+
+
+def decompress_parallel(blob: bytes, n_workers: int = 1) -> list[str]:
+    """Decode any of the three archive forms (LZJF / LZJM / LZJS)."""
+    if len(blob) >= 4 and blob[:4] == FILE_MAGIC:  # plain single archive
+        return decompress(blob)
+    if len(blob) >= 4 and blob[:4] == STREAM_MAGIC:
+        from .stream import decompress_lzjs
+
+        return decompress_lzjs(blob)
+    if len(blob) < 4 or blob[:4] != MULTI_MAGIC:
+        raise ValueError(
+            f"not a logzip archive: magic {bytes(blob[:4])!r} "
+            f"(expected {FILE_MAGIC!r}, {MULTI_MAGIC!r} or {STREAM_MAGIC!r})")
+    parts = list(iter_multi_chunks(blob))
+    if n_workers <= 1 or len(parts) == 1:
         decoded = [decompress(p) for p in parts]
     else:
         with cf.ProcessPoolExecutor(max_workers=n_workers) as ex:

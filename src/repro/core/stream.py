@@ -1,0 +1,427 @@
+"""Streaming compression sessions + the LZJS indexed appendable container
+(DESIGN.md §9).
+
+Container layout::
+
+    b"LZJS" | u8 version
+    varint(header_len) | zlib(json session header: level/kernel/format +
+                              seed templates/params)
+    repeat:  b"CHNK" | varint(blob_len) | LZJF chunk blob (session mode)
+             varint(td_len) | zlib(template-delta column)
+             varint(pd_len) | zlib(ParamDict-delta column)
+    zlib(json footer: per-chunk index)
+    u64le(footer_len) | b"LZJSIDX1"
+
+Chunk blobs are ordinary ``codec`` archives whose meta carries
+``stream = {base, n_delta, used, pd_base, pd_delta}``: EventIDs are the
+session store's global ids and ParaIDs index the session-shared
+``ParamDict`` — the paper's §III-E observation (templates evolve
+slowly) plus LogShrink's cross-record commonality applied inside one
+stream. Each chunk's template/param *deltas* ride in the record frame,
+outside the kernel-compressed blob, so a reader reconstructs the full
+dictionaries by reading only the (small) delta sections — never decoding
+chunk payloads it does not need. The footer index enables O(1) append
+(truncate the footer, add chunk records, rewrite it — chunk data is
+never rewritten) and random-access decompression by line range (only
+covering chunks are decoded). ``iter_stream`` decodes forward with no
+seeking (pipes), accumulating deltas as it goes. Session memory is
+bounded by one chunk buffer plus the dictionaries (which grow with
+DISTINCT templates/params, not corpus length).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+import zlib
+
+import numpy as np
+
+from .codec import _decompress_objects, open_container, read_structured
+from .encode import ParamDict, join_column, split_column, write_varint
+from .stages import LogzipConfig, StreamSession, run_pipeline
+from .templates import TemplateStore
+
+STREAM_MAGIC = b"LZJS"
+CHUNK_MAGIC = b"CHNK"
+FOOTER_MAGIC = b"LZJSIDX1"
+VERSION = 1
+
+
+def _read_varint(f) -> int:
+    cur = shift = 0
+    while True:
+        b = f.read(1)
+        if not b:
+            raise ValueError("truncated LZJS stream while reading varint")
+        cur |= (b[0] & 0x7F) << shift
+        if not b[0] & 0x80:
+            return cur
+        shift += 7
+
+
+def _frame(values: list[str]) -> bytes:
+    return zlib.compress(join_column(values), 6)
+
+
+def _unframe(data: bytes) -> list[str]:
+    try:
+        return split_column(zlib.decompress(data))
+    except Exception as e:
+        raise ValueError(f"corrupt LZJS delta frame: {e}") from e
+
+
+# ------------------------------------------------------------------ writer
+
+class StreamingCompressor:
+    """Incremental compression session over an unbounded line stream.
+
+    Callers ``feed`` lines; chunks are cut when the buffered line count
+    or byte budget is hit and run through the staged pipeline with this
+    session's shared, growing ``TemplateStore`` + ``ParamDict`` (match
+    known templates first, ISE only on the unmatched remainder, emit the
+    deltas). ``close`` writes the footer index.
+
+    ``out`` is a path or a binary file-like (only ``write`` is needed).
+    ``append=True`` reopens an existing container (path only): the
+    session state is re-seeded from the container, the footer is
+    truncated, and new chunks extend the same session — EventIDs and
+    ParaIDs stay stable across appends. With ``cfg=None`` an append
+    inherits the container's level/kernel/format (appending with a
+    different format would silently fragment the store).
+    """
+
+    def __init__(self, out, cfg: LogzipConfig | None = None, *,
+                 chunk_lines: int = 8192, chunk_bytes: int = 8 << 20,
+                 store: TemplateStore | None = None, append: bool = False,
+                 stage_times: dict | None = None):
+        self.chunk_lines = int(chunk_lines)
+        self.chunk_bytes = int(chunk_bytes)
+        self.stage_times = stage_times
+        self._buf: list[str] = []
+        self._buf_bytes = 0
+        self._closed = False
+        self._summary: dict | None = None
+
+        if append:
+            if not isinstance(out, (str, os.PathLike)):
+                raise ValueError("append=True needs a path")
+            rd = LZJSReader(out)
+            if cfg is None:
+                # continue with the container's own settings — appending
+                # with a different format would silently fragment the store
+                cfg = LogzipConfig(level=rd.footer["level"], kernel=rd.footer["kernel"],
+                                   format=rd.footer["format"])
+            seed_store = store if store is not None else TemplateStore(rd.templates)
+            if seed_store.templates != rd.templates:
+                # a superset store would make appended chunks reference
+                # templates no delta frame ever serializes — the container
+                # would be permanently unreadable
+                raise ValueError(
+                    "append store must equal the container's template list "
+                    "(global ids and delta chain must stay consistent)")
+            self.session = StreamSession(seed_store, ParamDict(rd.params))
+            self.index = [dict(e) for e in rd.index]
+            self.total_lines = rd.n_lines
+            footer_offset = rd.footer_offset
+            rd.close()
+            self._own = True
+            self._f = open(out, "r+b")
+            self._f.seek(footer_offset)
+            self._f.truncate()
+            self._pos = footer_offset
+        else:
+            cfg = cfg or LogzipConfig()
+            self.session = StreamSession(store)
+            self.index: list[dict] = []
+            self.total_lines = 0
+            self._own = isinstance(out, (str, os.PathLike))
+            self._f = open(out, "wb") if self._own else out
+
+        if cfg.template_store is not None:
+            raise ValueError("pass the session store via store=, not cfg.template_store")
+        self.cfg = cfg
+        if not append:
+            self._write_header()
+
+    @property
+    def store(self) -> TemplateStore:
+        return self.session.store
+
+    def _write_header(self) -> None:
+        head = zlib.compress(json.dumps({
+            "v": VERSION, "level": self.cfg.level, "kernel": self.cfg.kernel,
+            "format": self.cfg.format,
+            "seed_templates": [list(t) for t in self.session.store.templates],
+            "seed_params": list(self.session.paradict.values),
+        }).encode("utf-8"))
+        out = bytearray(STREAM_MAGIC)
+        out.append(VERSION)
+        write_varint(out, len(head))
+        out += head
+        self._f.write(bytes(out))
+        self._pos = len(out)
+
+    # -- feeding -------------------------------------------------------
+    def feed_line(self, line: str) -> None:
+        self._buf.append(line)
+        self._buf_bytes += len(line) + 1
+        if len(self._buf) >= self.chunk_lines or self._buf_bytes >= self.chunk_bytes:
+            self.flush_chunk()
+
+    def feed(self, lines) -> None:
+        for line in lines:
+            self.feed_line(line)
+
+    def flush_chunk(self) -> None:
+        """Cut the current buffer into one chunk record."""
+        if not self._buf:
+            return
+        ch = run_pipeline(self._buf, self.cfg, stage_times=self.stage_times,
+                          session=self.session)
+        td = _frame(ch.delta_templates or [])
+        pd = _frame(ch.delta_params or [])
+        rec = bytearray(CHUNK_MAGIC)
+        write_varint(rec, len(ch.blob))
+        rec += ch.blob
+        doffset = self._pos + len(rec)
+        write_varint(rec, len(td))
+        rec += td
+        write_varint(rec, len(pd))
+        rec += pd
+        self._f.write(bytes(rec))
+        self.index.append({
+            "offset": self._pos, "length": len(rec), "doffset": doffset,
+            "line_start": self.total_lines, "n_lines": len(self._buf),
+            "tpl_base": ch.tpl_base, "n_delta": ch.n_delta,
+            "pd_base": ch.pd_base,
+            "pd_delta": len(ch.delta_params or []),
+            "match_rate": round(ch.match_rate, 4),
+        })
+        self._pos += len(rec)
+        self.total_lines += len(self._buf)
+        self._buf = []
+        self._buf_bytes = 0
+
+    # -- closing -------------------------------------------------------
+    def close(self) -> dict:
+        if self._closed:
+            return self._summary
+        self.flush_chunk()
+        footer = {
+            "v": VERSION, "n_lines": self.total_lines,
+            "level": self.cfg.level, "kernel": self.cfg.kernel,
+            "format": self.cfg.format,
+            "chunks": self.index,
+        }
+        fb = zlib.compress(json.dumps(footer).encode("utf-8"))
+        self._f.write(fb)
+        self._f.write(len(fb).to_bytes(8, "little"))
+        self._f.write(FOOTER_MAGIC)
+        self._f.flush()
+        if self._own:
+            self._f.close()
+        self._closed = True
+        self._summary = {
+            "n_lines": self.total_lines, "n_chunks": len(self.index),
+            "n_templates": len(self.session.store.templates),
+            "n_params": len(self.session.paradict.values),
+        }
+        return self._summary
+
+    def __enter__(self) -> "StreamingCompressor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ------------------------------------------------------------------ reader
+
+class LZJSReader:
+    """Footer-indexed random access over an LZJS container.
+
+    On open, the (small) delta frames of every chunk are read to rebuild
+    the session's full template store and ParamDict — chunk *payloads*
+    are only decoded on demand. ``chunks_decoded`` counts payload
+    decodes; the benchmark's random-access assertion keys on it ("only
+    covering chunks are decoded").
+
+    ``src`` is a path or a seekable binary file-like.
+    """
+
+    def __init__(self, src):
+        self._own = isinstance(src, (str, os.PathLike))
+        self._f = open(src, "rb") if self._own else src
+        self._lock = threading.Lock()  # shared handle; seeks must not interleave
+        f = self._f
+        f.seek(0)
+        head = f.read(5)
+        if len(head) < 5 or head[:4] != STREAM_MAGIC:
+            raise ValueError(
+                f"not an LZJS container: magic {bytes(head[:4])!r}, expected {STREAM_MAGIC!r}")
+        hlen = _read_varint(f)
+        try:
+            self.header = json.loads(zlib.decompress(f.read(hlen)).decode("utf-8"))
+        except Exception as e:
+            raise ValueError(f"corrupt LZJS header: {e}") from e
+        f.seek(0, os.SEEK_END)
+        end = f.tell()
+        if end < 16:
+            raise ValueError("truncated LZJS container: no footer")
+        f.seek(end - 16)
+        tail = f.read(16)
+        if tail[8:] != FOOTER_MAGIC:
+            raise ValueError("truncated or corrupt LZJS container: footer magic missing "
+                             "(was the session closed?)")
+        flen = int.from_bytes(tail[:8], "little")
+        if flen + 16 > end:
+            raise ValueError("corrupt LZJS container: footer length out of range")
+        self.footer_offset = end - 16 - flen
+        f.seek(self.footer_offset)
+        try:
+            self.footer = json.loads(zlib.decompress(f.read(flen)).decode("utf-8"))
+        except Exception as e:
+            raise ValueError(f"corrupt LZJS footer: {e}") from e
+        self.index: list[dict] = self.footer["chunks"]
+        self.n_lines: int = self.footer["n_lines"]
+        self.chunks_decoded = 0
+        self._load_dictionaries()
+
+    def _load_dictionaries(self) -> None:
+        """Rebuild the session template store + ParamDict from the delta
+        frames (no chunk payload decodes)."""
+        from .codec import _deserialize_template
+
+        self.templates: list[tuple] = [tuple(t) for t in self.header.get("seed_templates", [])]
+        self.params: list[str] = list(self.header.get("seed_params", []))
+        for k, e in enumerate(self.index):
+            with self._lock:
+                self._f.seek(e["doffset"])
+                data = self._f.read(e["offset"] + e["length"] - e["doffset"])
+            bf = io.BytesIO(data)
+            td = bf.read(_read_varint(bf))
+            pd_len = _read_varint(bf)
+            pd = bf.read(pd_len)
+            if e["tpl_base"] != len(self.templates) or e.get("pd_base", 0) > len(self.params):
+                raise ValueError(
+                    f"LZJS delta chain broken at chunk {k}: base "
+                    f"{e['tpl_base']}/{e.get('pd_base')} vs accumulated "
+                    f"{len(self.templates)}/{len(self.params)}")
+            self.templates.extend(tuple(_deserialize_template(s)) for s in _unframe(td))
+            self.params.extend(_unframe(pd))
+
+    def __len__(self) -> int:
+        return len(self.index)
+
+    def chunk_blob(self, k: int) -> bytes:
+        e = self.index[k]
+        with self._lock:
+            self._f.seek(e["offset"])
+            rec = self._f.read(e["length"])
+        if len(rec) != e["length"] or rec[:4] != CHUNK_MAGIC:
+            raise ValueError(f"corrupt LZJS chunk record {k}")
+        bf = io.BytesIO(rec[4:])
+        ln = _read_varint(bf)
+        blob = bf.read(ln)
+        if len(blob) != ln:
+            raise ValueError(f"corrupt LZJS chunk record {k}: short payload")
+        return blob
+
+    def decode_chunk(self, k: int) -> list[str]:
+        self.chunks_decoded += 1
+        from .codec import decompress
+
+        return decompress(self.chunk_blob(k), ext_templates=self.templates,
+                          ext_params=self.params)
+
+    def read_structured_chunk(self, k: int) -> dict:
+        return read_structured(self.chunk_blob(k), ext_templates=self.templates)
+
+    def read_events(self, k: int) -> np.ndarray:
+        """Global (session-stable) EventIDs of chunk ``k``'s matched lines."""
+        s = self.read_structured_chunk(k)
+        return np.asarray(s.get("events_global", s["events"]), np.int32)
+
+    def covering_chunks(self, start: int, count: int) -> list[int]:
+        stop = start + count
+        return [k for k, e in enumerate(self.index)
+                if e["line_start"] < stop and e["line_start"] + e["n_lines"] > start]
+
+    def read_range(self, start: int, count: int) -> list[str]:
+        """Lines [start, start+count) — decodes only covering chunks."""
+        out: list[str] = []
+        stop = start + count
+        for k in self.covering_chunks(start, count):
+            e = self.index[k]
+            d = self.decode_chunk(k)
+            lo = max(0, start - e["line_start"])
+            hi = min(e["n_lines"], stop - e["line_start"])
+            out.extend(d[lo:hi])
+        return out
+
+    def read_all(self) -> list[str]:
+        return self.read_range(0, self.n_lines)
+
+    def iter_lines(self):
+        for k in range(len(self.index)):
+            yield from self.decode_chunk(k)
+
+    def stats(self) -> dict:
+        return {
+            "n_lines": self.n_lines,
+            "n_chunks": len(self.index),
+            "n_templates": len(self.templates),
+            "n_params": len(self.params),
+            "level": self.footer.get("level"),
+            "kernel": self.footer.get("kernel"),
+            "format": self.footer.get("format"),
+            "chunks": self.index,
+        }
+
+    def close(self) -> None:
+        if self._own:
+            self._f.close()
+
+
+# ------------------------------------------------------ sequential decode
+
+def iter_stream(f):
+    """Forward-only decode of an LZJS byte stream (no seeking — works on
+    pipes): yields lines chunk by chunk, accumulating the delta frames."""
+    from .codec import _deserialize_template
+
+    head = f.read(5)
+    if len(head) < 5 or head[:4] != STREAM_MAGIC:
+        raise ValueError(
+            f"not an LZJS container: magic {bytes(head[:4])!r}, expected {STREAM_MAGIC!r}")
+    hlen = _read_varint(f)
+    try:
+        header = json.loads(zlib.decompress(f.read(hlen)).decode("utf-8"))
+    except Exception as e:
+        raise ValueError(f"corrupt LZJS header: {e}") from e
+    templates = [tuple(t) for t in header.get("seed_templates", [])]
+    params: list[str] = list(header.get("seed_params", []))
+    while True:
+        magic = f.read(4)
+        if magic != CHUNK_MAGIC:
+            return  # footer (zlib can't start with b"CHNK") or clean EOF
+        blob = f.read(_read_varint(f))
+        td = f.read(_read_varint(f))
+        pd = f.read(_read_varint(f))
+        objects, meta = open_container(blob)
+        stream = meta.get("stream")
+        if stream is not None and stream["base"] != len(templates):
+            raise ValueError(
+                f"LZJS template delta out of order: chunk base {stream['base']}, "
+                f"accumulated {len(templates)}")
+        templates.extend(tuple(_deserialize_template(s)) for s in _unframe(td))
+        params.extend(_unframe(pd))
+        yield from _decompress_objects(objects, meta, templates, params)
+
+
+def decompress_lzjs(blob: bytes) -> list[str]:
+    """Whole-container decode from an in-memory LZJS blob."""
+    return LZJSReader(io.BytesIO(blob)).read_all()

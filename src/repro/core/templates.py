@@ -11,6 +11,11 @@ runs ISE once; ``codec.compress(..., template_store=...)`` (via
 ``LogzipConfig.template_store``) then matches new corpora against the
 stored set — EventIDs are stable across archives/streams, which is what
 downstream consumers (anomaly detection, dashboards) key on.
+
+The store is *incremental*: it is append-only and ``add`` is
+get-or-assign, so a ``StreamingCompressor`` session can grow one store
+across chunks (DESIGN.md §9) — a template keeps the global id it was
+first assigned, forever. Existing ids never move.
 """
 
 from __future__ import annotations
@@ -24,12 +29,31 @@ from .tokenizer import STAR_ID, LogFormat, Vocab, tokenize
 
 
 class TemplateStore:
-    def __init__(self, templates: list[tuple]):
+    def __init__(self, templates: list[tuple] = ()):
         # each template: tuple of token strings, None = wildcard
         self.templates = [tuple(t) for t in templates]
+        self._index = {t: i for i, t in enumerate(self.templates)}
 
     def __len__(self):
         return len(self.templates)
+
+    def add(self, template) -> int:
+        """Get-or-assign the global id of ``template`` (append-only)."""
+        tup = tuple(template)
+        i = self._index.get(tup)
+        if i is None:
+            i = len(self.templates)
+            self._index[tup] = i
+            self.templates.append(tup)
+        return i
+
+    def extend_from_ise(self, result: ISEResult, vocab: Vocab) -> list[int]:
+        """Fold freshly-discovered templates in; -> global id per local id."""
+        out = []
+        for tpl in result.templates:
+            out.append(self.add(
+                tuple(None if int(t) == STAR_ID else vocab.token(int(t)) for t in tpl)))
+        return out
 
     @classmethod
     def from_ise(cls, result: ISEResult, vocab: Vocab) -> "TemplateStore":

@@ -18,6 +18,15 @@ Production properties implemented here and unit-tested:
   ``straggler_timeout`` is skipped-and-requeued so one slow host never
   stalls the step loop (the skip is logged and bounded);
 - **determinism**: shard order is a seeded permutation per epoch.
+
+Two storage layouts share one reader interface:
+
+- a directory of independent ``.lzj`` archives (``write_logzip_shards``);
+- one appendable ``LZJS`` container (``write_logzip_stream``), where each
+  manifest shard is ``"corpus.lzjs::chunkK"`` — ``read_shard`` seeks the
+  chunk through the footer index (no full-container decode) and, in
+  ``events`` mode, returns the session's *global* EventIDs (stable
+  across every chunk, which per-shard archives cannot offer).
 """
 
 from __future__ import annotations
@@ -95,7 +104,74 @@ def write_logzip_shards(
     return manifest
 
 
+def write_logzip_stream(
+    lines_iter,
+    out_dir: str,
+    shard_lines: int = 20000,
+    cfg: LogzipConfig | None = None,
+    name: str = "corpus.lzjs",
+) -> dict:
+    """Write an iterator of lines into ONE appendable LZJS container plus
+    a manifest whose shards address chunks via the footer index."""
+    from repro.core.stream import StreamingCompressor
+
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = cfg or LogzipConfig(level=3, kernel="gzip")
+    path = os.path.join(out_dir, name)
+    raw_bytes = 0
+    with StreamingCompressor(path, cfg, chunk_lines=shard_lines) as sc:
+        for line in lines_iter:
+            raw_bytes += len(line.encode("utf-8", "surrogateescape")) + 1
+            sc.feed_line(line)
+        sc.close()
+        index = sc.index
+    manifest = {
+        "container": name,
+        "shards": [
+            {"file": f"{name}::chunk{k}", "n_lines": e["n_lines"], "bytes": e["length"]}
+            for k, e in enumerate(index)
+        ],
+        "raw_bytes": raw_bytes,
+        "compressed_bytes": os.path.getsize(path),
+        "level": cfg.level,
+        "kernel": cfg.kernel,
+        "format": cfg.format,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+_LZJS_READERS: dict[str, tuple] = {}  # path -> (reader, (mtime_ns, size))
+_LZJS_LOCK = threading.Lock()
+
+
+def _lzjs_reader(path: str):
+    """Footer-parsed-once reader cache (thread-safe: LZJSReader locks its
+    file handle per chunk read). Keyed on (mtime, size) so a rewritten or
+    appended container is re-opened instead of served from a stale index."""
+    from repro.core.stream import LZJSReader
+
+    st = os.stat(path)
+    key = (st.st_mtime_ns, st.st_size)
+    with _LZJS_LOCK:
+        entry = _LZJS_READERS.get(path)
+        if entry is None or entry[1] != key:
+            if entry is not None:
+                entry[0].close()
+            entry = (LZJSReader(path), key)
+            _LZJS_READERS[path] = entry
+        return entry[0]
+
+
 def read_shard(path: str, mode: str = "bytes") -> list[np.ndarray]:
+    if "::chunk" in path:
+        base, _, suffix = path.rpartition("::chunk")
+        rd = _lzjs_reader(base)
+        k = int(suffix)
+        if mode == "events":
+            return [rd.read_events(k)]
+        return [encode_bytes(l) for l in rd.decode_chunk(k)]
     with open(path, "rb") as f:
         blob = f.read()
     if mode == "events":

@@ -1,21 +1,203 @@
 """logzip CLI.
 
+    # batch pack (bounded line buffering; LZJM when chunked)
     PYTHONPATH=src python -m repro.launch.compress pack in.log out.lzj \
-        --format "<Date> <Time> <Level> <Component>: <Content>" --level 3 --workers 4
-    PYTHONPATH=src python -m repro.launch.compress unpack out.lzj back.log
-    PYTHONPATH=src python -m repro.launch.compress inspect out.lzj
+        --format "<Date> <Time> <Level> <Component>: <Content>" --level 3 \
+        --workers 4 [--shared-store]
+    # streaming session -> LZJS (bounded memory; '-' reads stdin)
+    cat in.log | PYTHONPATH=src python -m repro.launch.compress stream - out.lzjs \
+        --format "..." --chunk-lines 8192 [--append]
+    # unpack any of LZJF / LZJM / LZJS; --range uses the LZJS footer index
+    PYTHONPATH=src python -m repro.launch.compress unpack out.lzjs back.log \
+        [--range START:COUNT]
+    PYTHONPATH=src python -m repro.launch.compress inspect out.lzjs
+
+``pack``/``stream`` accept ``-`` as the input to read stdin. Input lines
+are streamed with bounded buffering (one chunk at a time), never via a
+whole-file ``read()``.
 """
 
 from __future__ import annotations
 
 import argparse
+import io
 import sys
+
+
+def _open_input(path: str):
+    if path == "-":
+        return io.TextIOWrapper(sys.stdin.buffer, encoding="utf-8",
+                                errors="surrogateescape"), False
+    return open(path, encoding="utf-8", errors="surrogateescape"), True
+
+
+def _iter_lines(f, bufsize: int = 1 << 20):
+    """Yield exactly ``f.read().split("\\n")`` with bounded memory."""
+    carry = ""
+    while True:
+        block = f.read(bufsize)
+        if not block:
+            yield carry
+            return
+        parts = (carry + block).split("\n")
+        carry = parts.pop()
+        yield from parts
+
+
+def _cmd_pack(args) -> None:
+    from repro.core.codec import LogzipConfig, compress
+    from repro.core.parallel import compress_parallel, frame_multi
+
+    cfg = LogzipConfig(level=args.level, kernel=args.kernel, format=args.format)
+    f, close = _open_input(args.infile)
+    raw = 0
+    try:
+        if args.chunk_lines and args.workers <= 1 and not args.shared_store:
+            # bounded memory: compress chunk-by-chunk as lines arrive
+            # (compressed blobs are small and accumulate until the count
+            # prefix can be written)
+            blobs: list[bytes] = []
+            buf: list[str] = []
+            for line in _iter_lines(f):
+                raw += len(line.encode("utf-8", "surrogateescape")) + 1
+                buf.append(line)
+                if len(buf) >= args.chunk_lines:
+                    blobs.append(compress(buf, cfg))
+                    buf = []
+            if buf or not blobs:  # _iter_lines always yields >= 1 line
+                blobs.append(compress(buf, cfg))
+            raw -= 1
+            blob = frame_multi(blobs)
+        else:
+            # multi-worker / shared-store paths need the full chunk list
+            lines = list(_iter_lines(f))
+            raw = sum(len(l.encode("utf-8", "surrogateescape")) + 1 for l in lines) - 1
+            blob = compress_parallel(lines, cfg, n_workers=args.workers,
+                                     chunk_lines=args.chunk_lines,
+                                     shared_store=args.shared_store)
+    finally:
+        if close:
+            f.close()
+    with open(args.outfile, "wb") as fo:
+        fo.write(blob)
+    print(f"{raw/1e6:.2f} MB -> {len(blob)/1e6:.3f} MB (CR {raw/max(len(blob),1):.1f}x)")
+
+
+def _cmd_stream(args) -> None:
+    from repro.core.codec import LogzipConfig
+    from repro.core.stream import StreamingCompressor
+
+    cfg = None if args.append else LogzipConfig(level=args.level, kernel=args.kernel,
+                                                format=args.format)
+    f, close = _open_input(args.infile)
+    raw = 0
+    try:
+        with StreamingCompressor(args.outfile, cfg, chunk_lines=args.chunk_lines,
+                                 chunk_bytes=args.chunk_bytes,
+                                 append=args.append) as sc:
+            for line in _iter_lines(f):
+                raw += len(line.encode("utf-8", "surrogateescape")) + 1
+                sc.feed_line(line)
+            summary = sc.close()
+    finally:
+        if close:
+            f.close()
+    raw -= 1
+    print(f"{raw/1e6:.2f} MB -> {summary['n_chunks']} chunks, "
+          f"{summary['n_lines']} total lines, {summary['n_templates']} templates, "
+          f"{summary['n_params']} params -> {args.outfile}")
+
+
+def _cmd_unpack(args) -> None:
+    from repro.core.parallel import decompress_parallel
+    from repro.core.stream import STREAM_MAGIC, LZJSReader
+
+    with open(args.infile, "rb") as f:
+        magic = f.read(4)
+    if args.range:
+        if magic != STREAM_MAGIC:
+            sys.exit(f"--range needs an LZJS container (footer random access); "
+                     f"{args.infile} has magic {magic!r}")
+        start_s, sep, count_s = args.range.partition(":")
+        try:
+            if not sep:
+                raise ValueError
+            start, count = int(start_s), int(count_s)
+        except ValueError:
+            sys.exit(f"--range wants START:COUNT (got {args.range!r})")
+        rd = LZJSReader(args.infile)
+        lines = rd.read_range(start, count)
+        note = f" (range {start}:{count}, decoded {rd.chunks_decoded}/{len(rd)} chunks)"
+        rd.close()
+    elif magic == STREAM_MAGIC:
+        rd = LZJSReader(args.infile)
+        lines = rd.read_all()
+        note = ""
+        rd.close()
+    else:
+        with open(args.infile, "rb") as f:
+            blob = f.read()
+        lines = decompress_parallel(blob, n_workers=args.workers)
+        note = ""
+    with open(args.outfile, "w", encoding="utf-8", errors="surrogateescape") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {len(lines)} lines to {args.outfile}{note}")
+
+
+def _cmd_inspect(args) -> None:
+    from repro.core.codec import read_structured
+    from repro.core.parallel import MULTI_MAGIC, iter_multi_chunks
+    from repro.core.stream import STREAM_MAGIC, LZJSReader
+
+    with open(args.infile, "rb") as f:
+        blob = f.read()
+    if blob[:4] == STREAM_MAGIC:
+        rd = LZJSReader(io.BytesIO(blob))
+        s = rd.stats()
+        print(f"LZJS stream: {s['n_lines']} lines in {s['n_chunks']} chunks  "
+              f"level: {s['level']}  kernel: {s['kernel']}")
+        print(f"session store: {s['n_templates']} templates, {s['n_params']} params")
+        for k, e in enumerate(s["chunks"][:args.max_chunks]):
+            print(f"  chunk {k:3d}: lines [{e['line_start']}, "
+                  f"{e['line_start']+e['n_lines']})  +{e['n_delta']} templates  "
+                  f"+{e.get('pd_delta', 0)} params  match {e['match_rate']:.3f}")
+        if len(s["chunks"]) > args.max_chunks:
+            print(f"  ... {len(s['chunks']) - args.max_chunks} more chunks")
+        for t in rd.templates[:args.max_templates]:
+            print("  ", " ".join("<*>" if x is None else x for x in t))
+        return
+    if blob[:4] == MULTI_MAGIC:
+        total_lines = 0
+        rates = []
+        all_templates: set[str] = set()
+        rows = []
+        for k, part in enumerate(iter_multi_chunks(blob)):
+            s = read_structured(part)
+            n = s["meta"]["n"]
+            total_lines += n
+            rates.append((s["match_rate"] or 0.0, n))
+            all_templates.update(s["templates"])
+            rows.append((k, n, len(s["templates"]), s["match_rate"]))
+        agg = sum(r * n for r, n in rates) / max(total_lines, 1)
+        print(f"LZJM multi-chunk archive: {total_lines} lines in {len(rows)} chunks  "
+              f"distinct templates: {len(all_templates)}  "
+              f"line-weighted match_rate: {agg:.3f}")
+        for k, n, t, r in rows[:args.max_chunks]:
+            print(f"  chunk {k:3d}: {n} lines  {t} templates  match {r:.3f}")
+        if len(rows) > args.max_chunks:
+            print(f"  ... {len(rows) - args.max_chunks} more chunks")
+        return
+    s = read_structured(blob)
+    print(f"lines: {s['meta']['n']}  level: {s['meta']['level']}  "
+          f"templates: {len(s['templates'])}  match_rate: {s['match_rate']:.3f}")
+    for t in s["templates"][:args.max_templates]:
+        print("  ", t)
 
 
 def main():
     ap = argparse.ArgumentParser()
     sub = ap.add_subparsers(dest="cmd", required=True)
-    p = sub.add_parser("pack")
+    p = sub.add_parser("pack", help="batch compress a file ('-' = stdin)")
     p.add_argument("infile")
     p.add_argument("outfile")
     p.add_argument("--format", default=None)
@@ -23,46 +205,40 @@ def main():
     p.add_argument("--kernel", default="gzip", choices=["gzip", "bzip2", "lzma"])
     p.add_argument("--workers", type=int, default=1)
     p.add_argument("--chunk-lines", type=int, default=None)
-    u = sub.add_parser("unpack")
+    p.add_argument("--shared-store", action="store_true",
+                   help="seed one TemplateStore from a sample and share it "
+                        "across all chunks (cross-chunk EventID stability)")
+    s = sub.add_parser("stream", help="streaming session -> LZJS ('-' = stdin)")
+    s.add_argument("infile")
+    s.add_argument("outfile")
+    s.add_argument("--format", default=None)
+    s.add_argument("--level", type=int, default=3)
+    s.add_argument("--kernel", default="gzip", choices=["gzip", "bzip2", "lzma"])
+    s.add_argument("--chunk-lines", type=int, default=8192)
+    s.add_argument("--chunk-bytes", type=int, default=8 << 20)
+    s.add_argument("--append", action="store_true",
+                   help="extend an existing LZJS container in place")
+    u = sub.add_parser("unpack", help="decode LZJF / LZJM / LZJS")
     u.add_argument("infile")
     u.add_argument("outfile")
     u.add_argument("--workers", type=int, default=1)
-    i = sub.add_parser("inspect")
+    u.add_argument("--range", default=None, metavar="START:COUNT",
+                   help="decode only this line range (LZJS footer random access)")
+    i = sub.add_parser("inspect", help="per-archive / per-chunk stats")
     i.add_argument("infile")
+    i.add_argument("--max-chunks", type=int, default=20)
+    i.add_argument("--max-templates", type=int, default=20)
     args = ap.parse_args()
 
-    from repro.core.codec import LogzipConfig, read_structured
-    from repro.core.parallel import compress_parallel, decompress_parallel
-
-    if args.cmd == "pack":
-        with open(args.infile, encoding="utf-8", errors="surrogateescape") as f:
-            lines = f.read().split("\n")
-        raw = sum(len(l.encode("utf-8", "surrogateescape")) + 1 for l in lines) - 1
-        blob = compress_parallel(lines, LogzipConfig(level=args.level, kernel=args.kernel,
-                                                     format=args.format),
-                                 n_workers=args.workers, chunk_lines=args.chunk_lines)
-        with open(args.outfile, "wb") as f:
-            f.write(blob)
-        print(f"{raw/1e6:.2f} MB -> {len(blob)/1e6:.3f} MB (CR {raw/len(blob):.1f}x)")
-    elif args.cmd == "unpack":
-        with open(args.infile, "rb") as f:
-            blob = f.read()
-        lines = decompress_parallel(blob, n_workers=args.workers)
-        with open(args.outfile, "w", encoding="utf-8", errors="surrogateescape") as f:
-            f.write("\n".join(lines))
-        print(f"wrote {len(lines)} lines to {args.outfile}")
-    else:
-        with open(args.infile, "rb") as f:
-            blob = f.read()
-        if blob[:4] == b"LZJM":
-            print("multi-chunk archive; inspecting chunks is per-chunk")
-            sys.exit(0)
-        s = read_structured(blob)
-        print(f"lines: {s['meta']['n']}  level: {s['meta']['level']}  "
-              f"templates: {len(s['templates'])}  match_rate: {s['match_rate']:.3f}")
-        for t in s["templates"][:20]:
-            print("  ", t)
+    {"pack": _cmd_pack, "stream": _cmd_stream,
+     "unpack": _cmd_unpack, "inspect": _cmd_inspect}[args.cmd](args)
 
 
 if __name__ == "__main__":
-    main()
+    try:
+        main()
+    except BrokenPipeError:  # e.g. `inspect ... | head`
+        import os
+
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        sys.exit(0)
