@@ -13,7 +13,13 @@ encode / ise.cluster / ise.match / spans / columns / pack / kernel), on:
 - a streaming-session scenario (``bench_streaming``): single-archive vs
   per-chunk-independent vs shared-store ``StreamingCompressor`` CR (the
   session must close >= half the chunking CR gap), plus a footer-index
-  random-access check (a 1k-line range decodes only covering chunks).
+  random-access check (a 1k-line range decodes only covering chunks);
+- a ``device_pipeline`` scenario (ISSUE 3): a 20-chunk streaming session
+  through the Pallas kernel matcher with bucketed shapes, recording the
+  per-bucket call counts and the recompile (re-trace) counter after
+  warmup — the jit-cache contract is zero, and ``check_perf_gate.py``
+  fails CI if it regresses. On CPU the kernels run in interpret mode, so
+  this scenario's lines/sec calibrates *relative* cost only.
 
 ``SEED_REFERENCE`` is the seed-tree measurement of the same 40k-line
 HDFS / level-3 / gzip configuration in this container, recorded when the
@@ -143,6 +149,46 @@ def bench_streaming(lines: list[str], cfg: LogzipConfig, cr_single: float,
     }
 
 
+def bench_device_pipeline(lines: list[str], fmt: str, n_chunks: int = 20) -> dict:
+    """Kernel-path streaming session: bucketed static shapes must make
+    chunks 3..n reuse compiled executables (zero re-traces after the
+    2-chunk warmup while the template store settles)."""
+    import io
+
+    from repro.core.stream import StreamingCompressor
+    from repro.kernels import jitcache
+
+    n = len(lines)
+    chunk = max(50, n // n_chunks)
+    cfg = LogzipConfig(level=3, kernel="gzip", format=fmt,
+                       ise=ISEConfig(min_sample=120, max_iters=2, use_kernel=True))
+    jitcache.reset_counters()
+    buf = io.BytesIO()
+    warm_traces: dict | None = None
+    t0 = time.perf_counter()
+    with StreamingCompressor(buf, cfg, chunk_lines=chunk) as sc:
+        k = 0
+        for s in range(0, n, chunk):
+            sc.feed(lines[s:s + chunk])
+            sc.flush_chunk()
+            k += 1
+            if k == 2:
+                warm_traces = dict(jitcache.TRACE_COUNTS)
+    wall = time.perf_counter() - t0
+    stats = jitcache.bucket_stats()
+    recompiles = sum(stats["traces"].values()) - sum((warm_traces or {}).values())
+    return {
+        "n_lines": n,
+        "n_chunks": (n + chunk - 1) // chunk,
+        "lines_per_sec": round(n / wall, 1),
+        "interpret_mode": True,
+        "recompiles_after_warmup": int(recompiles),
+        "kernel_calls": stats["calls"],
+        "kernel_traces": stats["traces"],
+        "bucket_shapes": stats["bucket_shapes"],
+    }
+
+
 def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
     from repro.data.loggen import DATASETS
 
@@ -160,6 +206,9 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
     fast = results[0]
     streaming = bench_streaming(lines, cfg, fast["compression_ratio"],
                                 chunk_lines=max(500, n_lines // 20))
+    # interpret-mode kernels are slow on CPU: a small slice exercises the
+    # bucketed jit cache without dominating the benchmark wall clock
+    device = bench_device_pipeline(lines[: min(n_lines, 4000)], fmt)
     report = {
         "benchmark": "compress_throughput",
         "host": {"platform": platform.platform(), "python": platform.python_version()},
@@ -169,6 +218,7 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
         if n_lines == 40000 and dataset == "HDFS" else None,
         "results": results,
         "streaming": streaming,
+        "device_pipeline": device,
     }
     return report
 
@@ -210,6 +260,10 @@ def main() -> None:
     print(f"random access [{ra['start']}:{ra['start']+ra['count']}]: decoded "
           f"{ra['chunks_decoded']}/{ra['chunks_total']} chunks "
           f"(covering {ra['chunks_covering']}) ok={ra['ok']}")
+    d = report["device_pipeline"]
+    print(f"device pipeline (interpret, {d['n_chunks']} chunks): "
+          f"{d['lines_per_sec']:.0f} lines/s, traces {d['kernel_traces']}, "
+          f"recompiles after warmup {d['recompiles_after_warmup']}")
     print(f"wrote {out}")
 
 

@@ -1,0 +1,99 @@
+"""Throughput regression gate for CI (ISSUE 3 satellite).
+
+Compares a freshly-measured throughput report against the committed
+``BENCH_compress.json`` trajectory artifact:
+
+- per-scenario ``lines_per_sec`` must stay above ``(1 - slack)`` x the
+  recorded value. CI's smoke job runs quick sizes on shared runners, so
+  its slack is generous (gross regressions — an accidental O(n^2) loop,
+  a dead fast path — not single-percent drift);
+- no single pipeline *stage* may grow its share of the wall clock by
+  more than ``--stage-slack`` (relative) vs the recorded breakdown.
+  Fractions, not absolute seconds, so quick-size runs are comparable;
+  stages under ``--stage-floor`` of the wall are ignored (noise);
+- if the fresh report carries a ``device_pipeline`` scenario, its
+  recompile counter after warmup must be zero (the bucketed jit cache
+  contract).
+
+Exit code 1 with a per-check report on any violation.
+
+    PYTHONPATH=src python scripts/check_perf_gate.py \
+        --report BENCH_compress.quick.json --baseline BENCH_compress.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", required=True, help="fresh run (e.g. quick smoke)")
+    ap.add_argument("--baseline", required=True, help="committed BENCH_compress.json")
+    ap.add_argument("--slack", type=float, default=0.15,
+                    help="allowed lines/sec regression per scenario "
+                         "(0.15 = fail below 85%% of recorded)")
+    ap.add_argument("--stage-slack", type=float, default=0.30,
+                    help="allowed relative growth of any stage's share of wall")
+    ap.add_argument("--stage-floor", type=float, default=0.05,
+                    help="ignore stages below this fraction of recorded wall")
+    args = ap.parse_args()
+
+    with open(args.report) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures: list[str] = []
+    checks: list[str] = []
+
+    base_by_scenario = {r.get("scenario"): r for r in base["results"] if r.get("scenario")}
+    for r in fresh["results"]:
+        b = base_by_scenario.get(r.get("scenario"))
+        if b is None:
+            continue
+        floor = (1.0 - args.slack) * b["lines_per_sec"]
+        line = (f"lines/sec[{r['scenario']}]: fresh {r['lines_per_sec']:.0f} vs "
+                f"recorded {b['lines_per_sec']:.0f} (floor {floor:.0f})")
+        checks.append(line)
+        if r["lines_per_sec"] < floor:
+            failures.append(line)
+
+        bw, fw = b.get("wall_s", 0), r.get("wall_s", 0)
+        if not (bw and fw) or r.get("n_lines") != b.get("n_lines"):
+            # stage shares shift systematically with corpus size — only
+            # compare like-for-like runs (CI quick runs gate lines/sec only)
+            continue
+        for stage, bs in b.get("stages_s", {}).items():
+            bfrac = bs / bw
+            if bfrac < args.stage_floor:
+                continue
+            ffrac = r.get("stages_s", {}).get(stage, 0.0) / fw
+            cap = bfrac * (1.0 + args.stage_slack)
+            line = (f"stage[{r['scenario']}/{stage}]: share {ffrac:.2f} vs "
+                    f"recorded {bfrac:.2f} (cap {cap:.2f})")
+            checks.append(line)
+            if ffrac > cap:
+                failures.append(line)
+
+    dp = fresh.get("device_pipeline")
+    if dp is not None:
+        line = (f"device_pipeline recompiles after warmup: "
+                f"{dp.get('recompiles_after_warmup')}")
+        checks.append(line)
+        if dp.get("recompiles_after_warmup", 0) != 0:
+            failures.append(line)
+
+    for c in checks:
+        print(("FAIL  " if c in failures else "ok    ") + c)
+    if failures:
+        print(f"\nperf gate: {len(failures)} check(s) failed", file=sys.stderr)
+        return 1
+    print("\nperf gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,8 +18,13 @@ Everything here is lossless by construction:
 from __future__ import annotations
 
 import re
+import string
 
 import numpy as np
+
+from .textops import SegmentHasher, class_mask, first_occurrence_unique, intern_segments, runs_of
+
+_ALNUM_LUT = class_mask(string.digits + string.ascii_letters)
 
 # ---------------------------------------------------------------- varint
 
@@ -85,7 +90,14 @@ def decode_varints(data: bytes) -> list[int]:
 
 # ---------------------------------------------------------------- escaping
 
+_ESC_RE = re.compile(r"[\\\n\r\x00\x02]")
+
+
 def esc(s: str) -> str:
+    # almost every value needs no escaping — one C-level scan beats five
+    # replace passes (byte-identical output either way)
+    if _ESC_RE.search(s) is None:
+        return s
     return (
         s.replace("\\", "\\\\")
         .replace("\n", "\\n")
@@ -209,6 +221,59 @@ def split_subfields(value: str) -> tuple[str, list[str]]:
     return pattern, parts
 
 
+def split_subfields_batch(values: list[str]) -> tuple[list[str], np.ndarray, list[str], np.ndarray]:
+    """``split_subfields`` over a batch in a few numpy passes.
+
+    -> (patterns, part ids (flat, row-major), part table, row_ptr): the
+    parts of ``values[j]`` are ``table[pid]`` for ``pid`` in
+    ``part_ids[row_ptr[j]:row_ptr[j+1]]``, with the table in
+    first-occurrence order. Values must be pre-escaped (``esc``), which
+    guarantees they are newline-free so the batch can be newline-joined;
+    anything that defeats utf-8 encoding falls back to the scalar loop.
+    """
+    n = len(values)
+    row_ptr = np.zeros(n + 1, np.int64)
+    if n == 0:
+        return [], np.zeros(0, np.int64), [], row_ptr
+    try:
+        data = "\n".join(values).encode("utf-8", "surrogateescape")
+    except UnicodeEncodeError:
+        pats: list[str] = []
+        flat: list[int] = []
+        table: list[str] = []
+        seen: dict[str, int] = {}
+        for j, v in enumerate(values):
+            pat, parts = split_subfields(v)
+            pats.append(pat)
+            for s in parts:
+                i = seen.get(s)
+                if i is None:
+                    i = len(table)
+                    seen[s] = i
+                    table.append(s)
+                flat.append(i)
+            row_ptr[j + 1] = len(flat)
+        return pats, np.asarray(flat, np.int64), table, row_ptr
+
+    buf = np.frombuffer(data, np.uint8)
+    alnum = _ALNUM_LUT[buf]
+    starts, ends = runs_of(alnum)
+    part_ids, table = intern_segments(data, SegmentHasher(buf), starts, ends)
+
+    # patterns: drop alnum-run bytes, write \x00 at each run start
+    keep = ~alnum
+    marked = buf.copy()
+    marked[starts] = 0
+    keep[starts] = True
+    pats = marked[keep].tobytes().decode("utf-8", "surrogateescape").split("\n")
+
+    nl = np.flatnonzero(buf == 0x0A)
+    line_starts = np.concatenate([[0], nl + 1])
+    line_of = np.searchsorted(line_starts, starts, side="right") - 1
+    np.cumsum(np.bincount(line_of, minlength=n), out=row_ptr[1:])
+    return pats, part_ids, table, row_ptr
+
+
 def merge_subfields(pattern: str, parts: list[str]) -> str:
     segs = pattern.split("\x00")
     out = [segs[0]]
@@ -232,27 +297,27 @@ class ColumnCodec:
         self.paradict = paradict
 
     def encode(self, values: list[str]) -> dict[str, bytes]:
-        """Byte-identical to the per-value reference loop, but the regex /
-        escape work runs once per *distinct* value: values are factorized
-        (first-occurrence order, so pattern ids and ParaID assignment
-        order are unchanged) and the per-line remainder is numpy."""
+        """Byte-identical to the per-value reference loop, but the
+        escape / sub-field split work runs once per *distinct* value in
+        a few numpy passes (``split_subfields_batch``), with parts
+        hash-interned so ParaID lookups hit an int-keyed cache. All
+        interning stays in first-occurrence order, so pattern ids and
+        ParaID assignment order are unchanged."""
         n = len(values)
         inv, uvals = factorize(values)
+        # escape first so the \x00 slot marker can never collide with
+        # value bytes; decode merges then un-escapes.
+        pats, part_ids, part_table, prow = split_subfields_batch([esc(v) for v in uvals])
         patterns: dict[str, int] = {}
         pat_list: list[str] = []
         upid = np.empty(len(uvals), np.int64)
-        uparts: list[list[str]] = []
-        for j, v in enumerate(uvals):
-            # escape first so the \x00 slot marker can never collide with
-            # value bytes; decode merges then un-escapes.
-            pattern, parts = split_subfields(esc(v))
+        for j, pattern in enumerate(pats):
             pid = patterns.get(pattern)
             if pid is None:
                 pid = len(pat_list)
                 patterns[pattern] = pid
                 pat_list.append(pattern)
             upid[j] = pid
-            uparts.append(parts)
         pat_ids = upid[inv] if n else np.zeros(0, np.int64)
         objs: dict[str, bytes] = {
             f"{self.name}.pat": join_column(pat_list),
@@ -263,27 +328,37 @@ class ColumnCodec:
         # per-pattern rescan of the whole column)
         order = np.argsort(pat_ids, kind="stable")
         counts = np.bincount(pat_ids, minlength=len(pat_list)).astype(np.int64)
+        pd_cache: dict[int, int] = {}  # part id -> ParaID (same first-use order)
         group_start = 0
         for pid in range(len(pat_list)):
             c = int(counts[pid])
             us = inv[order[group_start:group_start + c]]  # uniques, value order
             group_start += c
-            n_slots = len(uparts[int(us[0])])
+            u0 = int(us[0])
+            n_slots = int(prow[u0 + 1] - prow[u0])
             if n_slots == 0:
                 continue
-            # factorize the unique-value ids within this pattern group so
+            # group the unique-value ids within this pattern group so
             # per-slot work (ParaID interning / joining) is per distinct
             # value; first-occurrence order keeps ParaIDs identical.
-            g_inv, g_uniq = factorize(us)
+            g_inv, gfirst = first_occurrence_unique(us)
+            g_uniq = us[gfirst]
             for k in range(n_slots):
                 key = f"{self.name}.p{pid}s{k}"
-                col_u = [uparts[u][k] for u in g_uniq]
+                pids_k = part_ids[prow[g_uniq] + k]
                 if self.paradict is not None:
+                    uids = np.empty(len(g_uniq), np.int64)
                     pd_id = self.paradict.id
-                    uids = np.fromiter((pd_id(p) for p in col_u), np.int64, len(col_u))
+                    for idx, p in enumerate(pids_k.tolist()):
+                        v = pd_cache.get(p)
+                        if v is None:
+                            v = pd_id(part_table[p])
+                            pd_cache[p] = v
+                        uids[idx] = v
                     objs[key] = encode_varints(uids[g_inv])
                 else:
                     # parts are alphanumeric runs -> esc is the identity
+                    col_u = [part_table[p] for p in pids_k.tolist()]
                     objs[key] = join_column([col_u[g] for g in g_inv], already_safe=True)
         return objs
 

@@ -90,8 +90,9 @@ def _final_col(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.nd
     return col
 
 
-def match_one_template(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
-    """(N,) bool: does each line match this template."""
+def match_one_template_dp(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
+    """(N,) bool via the rolling-column DP — the oracle for the fused
+    anchor path below (and the shape the Pallas kernel reproduces)."""
     out = np.zeros((ids.shape[0],), bool)
     t = ids.shape[1]
     lens_c = np.minimum(lens, t)
@@ -102,6 +103,130 @@ def match_one_template(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) 
     # over-length lines never match (their tail was truncated)
     out &= lens <= t
     return out
+
+
+# ------------------------------------------------- fused anchor matching
+#
+# A template is literal runs anchored around stars:
+#
+#     P *1 L1 *2 L2 ... *k S      (prefix P, mids L1..Lk-1, suffix S)
+#
+# Matching and span extraction reduce to run placement (DESIGN.md §10):
+# the DP's reachability set after "P *1 L1 ... Lj" has a closed form —
+# an occurrence of Lj ending at e is reachable iff e >= minreach_j,
+# where minreach_j is the LEFTMOST valid end (each star absorbs >= 1).
+# A forward pass computes the minreach chain (match test), a backward
+# pass takes the RIGHTMOST valid occurrence below the running cursor —
+# exactly the DP backtrack's "largest i' <= i-1" tie-break, so spans are
+# bit-identical to ``extract_spans_dp``. Cost: O(N * T * sum |runs|)
+# vectorized compares instead of the O(N * T * m) DP with its (N, T, m)
+# backtrack tensor, fusing match + span extraction into one pass.
+
+
+def template_units(template: np.ndarray) -> tuple[np.ndarray, list[np.ndarray], np.ndarray, int]:
+    """Decompose into (prefix, mids, suffix, n_stars); literal runs are
+    id arrays (mids possibly empty for consecutive stars)."""
+    arr = np.asarray(template)
+    stars = np.flatnonzero(arr == STAR_ID)
+    if len(stars) == 0:
+        return arr, [], arr[:0], 0
+    prefix = arr[: stars[0]]
+    suffix = arr[stars[-1] + 1:]
+    mids = [arr[stars[i] + 1: stars[i + 1]] for i in range(len(stars) - 1)]
+    return prefix, mids, suffix, len(stars)
+
+
+def _occ_ends(ids: np.ndarray, lit: np.ndarray) -> np.ndarray:
+    """(N, T+1) bool: does an occurrence of literal run ``lit`` END at
+    position e (tokens [e-|lit|, e) equal lit). Empty runs occur at
+    every position. PAD can never equal a literal, so occurrences are
+    automatically confined to the line's real tokens."""
+    n, t = ids.shape
+    L = len(lit)
+    occ = np.zeros((n, t + 1), bool)
+    if L == 0:
+        occ[:] = True
+        return occ
+    if L > t:
+        return occ
+    acc = ids[:, :t - L + 1] == int(lit[0])
+    for k in range(1, L):
+        acc = acc & (ids[:, k:t - L + 1 + k] == int(lit[k]))
+    occ[:, L:] = acc
+    return occ
+
+
+def match_extract_one(
+    ids: np.ndarray,
+    lens: np.ndarray,
+    template: np.ndarray,
+    *,
+    want_spans: bool = False,
+) -> tuple[np.ndarray, np.ndarray | None]:
+    """Fused match + parameter-span extraction for one template.
+
+    -> (ok (N,) bool, spans (N, n_stars, 2) int32 or None). Spans rows
+    are only meaningful where ``ok``; bit-identical to
+    ``match_one_template_dp`` / ``extract_spans_dp``.
+    """
+    n, t = ids.shape
+    prefix, mids, suffix, k = template_units(np.asarray(template))
+    m = len(template)
+    spans = np.zeros((n, k, 2), np.int32) if want_spans else None
+    p, q = len(prefix), len(suffix)
+    min_len = (m - k) + k  # literals + one token per star
+    if n == 0 or min_len > t or (k == 0 and m > t):
+        return np.zeros(n, bool), spans
+
+    lens64 = lens.astype(np.int64)
+    ok = lens64 <= t
+    if k == 0:
+        ok &= lens64 == m
+        if m:
+            ok &= (ids[:, :m] == np.asarray(template)[None, :]).all(axis=1)
+        return ok, spans
+
+    ok &= lens64 >= min_len
+    if p:
+        ok &= (ids[:, :p] == prefix[None, :]).all(axis=1)
+    if q:
+        # suffix at positions [len-q, len) — clip gathers for short lines
+        # (those rows are already False via the min_len check)
+        base = np.maximum(lens64 - q, 0)[:, None] + np.arange(q)[None, :]
+        ok &= (np.take_along_axis(ids, np.minimum(base, t - 1), axis=1)
+               == suffix[None, :]).all(axis=1)
+
+    pos = np.arange(t + 1)
+    # forward: leftmost valid end of each mid run (the reachability frontier)
+    minr = np.full(n, p, np.int64)
+    occs = []
+    for lit in mids:
+        occ = _occ_ends(ids, lit)
+        occs.append(occ)
+        gate = occ & (pos[None, :] >= (minr + 1 + len(lit))[:, None])
+        has = gate.any(axis=1)
+        ok &= has
+        minr = np.where(has, gate.argmax(axis=1), t)  # first True
+    ok &= minr <= lens64 - q - 1
+
+    if want_spans and ok.any():
+        i = lens64 - q  # cursor: end of the current star's span
+        for j in range(k - 1, -1, -1):
+            if j == 0:
+                e = np.full(n, p, np.int64)
+            else:
+                occ = occs[j - 1]
+                gate = occ & (pos[None, :] <= (i - 1)[:, None])
+                e = t - np.argmax(gate[:, ::-1], axis=1)  # last True
+            spans[:, j, 0] = e
+            spans[:, j, 1] = i
+            i = e - (len(mids[j - 1]) if j else 0)
+    return ok, spans
+
+
+def match_one_template(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
+    """(N,) bool: does each line match this template (fused anchor path)."""
+    return match_extract_one(ids, lens, template)[0]
 
 
 def match_first(
@@ -125,11 +250,15 @@ def match_first(
         return assign
 
     if dedup and n >= DEDUP_MIN_LINES:
-        key = np.column_stack([lens.astype(np.int32), ids])
-        uniq, inv = np.unique(key, axis=0, return_inverse=True)
-        if len(uniq) < n:
+        # memcmp-sort on a void view of the packed rows — much cheaper
+        # than np.unique(axis=0)'s per-column lexsort; only the grouping
+        # matters (matching is deterministic per row), not the order
+        key = np.ascontiguousarray(np.column_stack([lens.astype(np.int32), ids]))
+        rows = key.view(np.dtype((np.void, key.shape[1] * key.itemsize))).ravel()
+        _, first, inv = np.unique(rows, return_index=True, return_inverse=True)
+        if len(first) < n:
             sub = match_first(
-                np.ascontiguousarray(uniq[:, 1:]), uniq[:, 0], templates,
+                ids[first], lens[first], templates,
                 use_kernel=use_kernel, dedup=False,
             )
             return sub[inv].astype(np.int32)
@@ -157,9 +286,15 @@ def match_first(
 def extract_spans(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
     """Parameter spans for lines *known to match* ``template``.
 
-    Returns spans (N, n_stars, 2) int32 — token ranges [s, e) absorbed by
-    each '*' in template order. Vectorized backtrack over DP columns.
+    Returns spans (N, n_stars, 2) int32 — token ranges [s, e) absorbed
+    by each '*' in template order, via the fused anchor pass
+    (bit-identical to the DP backtrack in ``extract_spans_dp``).
     """
+    return match_extract_one(ids, lens, template, want_spans=True)[1]
+
+
+def extract_spans_dp(ids: np.ndarray, lens: np.ndarray, template: np.ndarray) -> np.ndarray:
+    """DP-backtrack oracle for ``extract_spans`` (full M tensor)."""
     n, t = ids.shape
     m = len(template)
     stars = [j for j in range(m) if int(template[j]) == STAR_ID]

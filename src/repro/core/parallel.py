@@ -24,6 +24,8 @@ import numpy as np
 
 from .codec import FILE_MAGIC, LogzipConfig, compress, decompress
 from .encode import write_varint
+from .stages import pack_stage, run_stages
+from .timing import StageTimer
 
 MULTI_MAGIC = b"LZJM"
 STREAM_MAGIC = b"LZJS"  # handled by repro.core.stream; dispatched here too
@@ -75,11 +77,28 @@ def compress_parallel(
         cfg = replace(cfg, template_store=seed_template_store(lines, cfg))
 
     if n_workers <= 1 or len(chunks) == 1:
-        blobs = [compress(c, cfg) for c in chunks]
+        blobs = _compress_chunks_pipelined(chunks, cfg)
     else:
         with cf.ProcessPoolExecutor(max_workers=n_workers) as ex:
             blobs = list(ex.map(_compress_chunk, [(c, cfg) for c in chunks]))
     return frame_multi(blobs)
+
+
+def _compress_chunks_pipelined(chunks: list[list[str]], cfg: LogzipConfig) -> list[bytes]:
+    """Sequential chunk compression with the entropy kernel double-
+    buffered onto one worker thread (DESIGN.md §10.4): gzip of chunk k
+    overlaps the parse/tokenize/match of chunk k+1. Blob order (and
+    bytes) are identical to the serial loop."""
+    if len(chunks) == 1:
+        return [compress(chunks[0], cfg)]
+    with cf.ThreadPoolExecutor(max_workers=1, thread_name_prefix="lzjm-pack") as ex:
+        futs = []
+        for c in chunks:
+            ch = run_stages(c, cfg)
+            if len(futs) >= 2:
+                futs[-2].result()  # double buffer: at most 2 chunks in flight
+            futs.append(ex.submit(pack_stage, ch, cfg, StageTimer(None)))
+        return [f.result() for f in futs]
 
 
 def frame_multi(blobs: list[bytes]) -> bytes:

@@ -42,8 +42,9 @@ from .encode import (
 from .ise import ISEConfig, ISEResult, iterative_structure_extraction
 from .match import extract_spans, match_first
 from .templates import TemplateStore
+from .textops import first_occurrence_unique
 from .timing import StageTimer
-from .tokenizer import STAR_ID, LogFormat, Vocab, tokenize
+from .tokenizer import STAR_ID, LogFormat, TokenGrid, Vocab, tokenize_batch
 
 FILE_MAGIC = b"LZJF"
 WILDCARD_MARK = "\x02"
@@ -100,14 +101,6 @@ def serialize_template(tokens: list[str | None]) -> str:
     return "\x00".join(WILDCARD_MARK if t is None else esc(t) for t in tokens)
 
 
-def _param_substring(tokens: list[str], delims: list[str], s: int, e: int) -> str:
-    out = [tokens[s]]
-    for i in range(s + 1, e):
-        out.append(delims[i])
-        out.append(tokens[i])
-    return "".join(out)
-
-
 # ----------------------------------------------------------------- Chunk IR
 
 @dataclass
@@ -128,8 +121,7 @@ class Chunk:
     # -- dedup_stage
     inverse: np.ndarray | None = None        # line -> distinct-content index
     uniq: list[str] | None = None
-    tok_u: list | None = None
-    delim_u: list | None = None
+    grid: TokenGrid | None = None            # batched tokens/delims/offsets
     vocab: Vocab | None = None
     ids_u: np.ndarray | None = None
     lens_u: np.ndarray | None = None
@@ -188,14 +180,10 @@ def dedup_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer) -> None:
         else:
             ch.inverse, ch.uniq = np.arange(n, dtype=np.int64), list(ch.contents)
     with tm("tokenize"):
-        ch.tok_u, ch.delim_u = [], []
-        for c in ch.uniq:
-            t, d = tokenize(c)
-            ch.tok_u.append(t)
-            ch.delim_u.append(d)
-    with tm("encode"):
         ch.vocab = Vocab()
-        ch.ids_u, ch.lens_u = ch.vocab.encode_batch(ch.tok_u, cfg.max_tokens, tight=True)
+        ch.grid = tokenize_batch(ch.uniq, ch.vocab, cfg.max_tokens, tight=True)
+    with tm("encode"):
+        ch.ids_u, ch.lens_u = ch.grid.ids, ch.grid.lens
         ch.ids = ch.ids_u[ch.inverse]
         ch.lens = ch.lens_u[ch.inverse]
         ch.levels = factorize(ch.columns["Level"])[0] if "Level" in ch.columns else None
@@ -335,8 +323,7 @@ def encode_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer,
         line_idx = np.nonzero(assign == g)[0]
         with tm("spans"):
             star_cols, pat_list, pat_ids = _template_params(
-                tpl, line_idx, ch.inverse, ch.ids_u, ch.lens_u, ch.tok_u, ch.delim_u,
-                vocab_arr)
+                tpl, line_idx, ch.inverse, ch.grid, vocab_arr)
         with tm("columns"):
             for s, col in enumerate(star_cols):
                 ch.objects.update(ColumnCodec(f"t{k}.v{s}", paradict).encode(col))
@@ -363,14 +350,19 @@ def pack_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer) -> bytes:
     return ch.blob
 
 
-def run_pipeline(
+def run_stages(
     lines: list[str],
     cfg: LogzipConfig | None = None,
     *,
     stage_times: dict | None = None,
     session: StreamSession | None = None,
 ) -> Chunk:
-    """parse -> dedup -> structure -> encode -> pack over one chunk."""
+    """parse -> dedup -> structure -> encode over one chunk — everything
+    *except* the entropy kernel. ``pack_stage`` is split out so callers
+    can overlap it with the next chunk's compute (the double-buffered
+    handoff in ``repro.core.stream`` / ``repro.core.parallel``: gzip of
+    chunk k runs on a worker thread — zlib/bz2/lzma release the GIL —
+    while chunk k+1 is tokenized and matched here)."""
     cfg = cfg or LogzipConfig()
     if cfg.level not in (1, 2, 3):
         raise ValueError("level must be 1, 2 or 3")
@@ -383,24 +375,38 @@ def run_pipeline(
         dedup_stage(ch, cfg, tm)
         structure_stage(ch, cfg, tm, session=session)
     encode_stage(ch, cfg, tm, session=session)
-    pack_stage(ch, cfg, tm)
     return ch
 
 
-def _template_params(tpl, line_idx, inverse, ids_u, lens_u, tok_u, delim_u, vocab_arr):
+def run_pipeline(
+    lines: list[str],
+    cfg: LogzipConfig | None = None,
+    *,
+    stage_times: dict | None = None,
+    session: StreamSession | None = None,
+) -> Chunk:
+    """parse -> dedup -> structure -> encode -> pack over one chunk."""
+    cfg = cfg or LogzipConfig()
+    ch = run_stages(lines, cfg, stage_times=stage_times, session=session)
+    pack_stage(ch, cfg, StageTimer(stage_times))
+    return ch
+
+
+def _template_params(tpl, line_idx, inverse, grid: TokenGrid, vocab_arr):
     """Star-value columns + gap-pattern dictionary for one template.
 
-    All heavy work runs once per distinct content: spans are extracted on
-    the unique rows, star substrings come from one vectorized vocab
-    lookup (single-token spans, the common case) or a per-unique join,
-    and gap patterns are memoized on (delims, span widths) — identical to
-    walking every line, because the gap sequence is a pure function of
-    that key for a fixed template.
+    All heavy work runs once per distinct content: spans come from the
+    fused anchor matcher on the unique rows, star substrings from one
+    vectorized vocab lookup (single-token spans, the common case) or an
+    O(1) byte slice of the original content (multi-token spans), and gap
+    patterns are computed once per distinct (star widths, interned delim
+    row) class — identical to walking every line, because the gap
+    sequence is a pure function of that key for a fixed template.
     """
     u_lines = inverse[line_idx]
-    uu_inv, uu = factorize(u_lines)  # uniques in first-line-occurrence order
-    uu_arr = np.asarray(uu, np.int64)
-    spans_u = extract_spans(ids_u[uu_arr], lens_u[uu_arr], tpl)
+    uu_inv, ufirst = first_occurrence_unique(u_lines)
+    uu_arr = u_lines[ufirst]  # uniques in first-line-occurrence order
+    spans_u = extract_spans(grid.ids[uu_arr], grid.lens[uu_arr], tpl)
     n_uu, n_stars = spans_u.shape[:2]
     widths = spans_u[:, :, 1] - spans_u[:, :, 0]
 
@@ -409,47 +415,48 @@ def _template_params(tpl, line_idx, inverse, ids_u, lens_u, tok_u, delim_u, voca
         single = widths[:, si] == 1
         if single.any():
             rows = np.nonzero(single)[0]
-            ustar[rows, si] = vocab_arr[ids_u[uu_arr[rows], spans_u[rows, si, 0]]]
+            ustar[rows, si] = vocab_arr[grid.ids[uu_arr[rows], spans_u[rows, si, 0]]]
         for r in np.nonzero(~single)[0]:
-            u = uu[r]
-            ustar[r, si] = _param_substring(
-                tok_u[u], delim_u[u], int(spans_u[r, si, 0]), int(spans_u[r, si, 1]))
+            u = int(uu_arr[r])
+            ustar[r, si] = grid.substring(u, int(spans_u[r, si, 0]), int(spans_u[r, si, 1]))
 
-    # gap (unit-delimiter) pattern per unique, memoized: for a fixed
-    # template the delimiter positions depend only on the star widths
+    # gap (unit-delimiter) pattern per (widths, delim-row) class: rows in
+    # one class share every delimiter run and every star width, so the
+    # walk below runs once per class, not once per unique line
     tpl_is_star = [int(t) == STAR_ID for t in tpl]
-    gcache: dict[tuple, str] = {}
-    upat: list[str] = []
-    for r in range(n_uu):
-        delims = delim_u[uu[r]]
-        key = (widths[r].tobytes(), *delims)
-        p = gcache.get(key)
-        if p is None:
-            gaps = [delims[0]]
-            si = 0
-            pos = 0
-            for is_star in tpl_is_star:
-                if is_star:
-                    pos = int(spans_u[r, si, 1])
-                    si += 1
-                else:
-                    pos += 1
-                gaps.append(delims[pos])
-            p = "\x00".join(esc(gap) for gap in gaps)
-            gcache[key] = p
-        upat.append(p)
+    dl = grid.delim_ids[uu_arr]
+    gkey = np.ascontiguousarray(np.concatenate([widths.astype(np.int32), dl], axis=1))
+    rows_v = gkey.view(np.dtype((np.void, gkey.shape[1] * gkey.itemsize))).ravel()
+    ginv, gfirst = first_occurrence_unique(rows_v)
+    dtab = [esc(d) for d in grid.delim_table]
+    class_pat: list[str] = []
+    for r in gfirst.tolist():
+        drow = dl[r]
+        gaps = [dtab[drow[0]]]
+        si = 0
+        pos = 0
+        for is_star in tpl_is_star:
+            if is_star:
+                pos = int(spans_u[r, si, 1])
+                si += 1
+            else:
+                pos += 1
+            gaps.append(dtab[drow[pos]])
+        class_pat.append("\x00".join(gaps))
 
-    # intern patterns over uniques (first-occurrence order == line order)
+    # intern patterns over classes (class order == first-occurrence order
+    # over unique lines, so pattern ids match the per-line scan)
     pat_map: dict[str, int] = {}
     pat_list: list[str] = []
-    upid = np.empty(n_uu, np.int64)
-    for r, p in enumerate(upat):
+    cpid = np.empty(len(class_pat), np.int64)
+    for j, p in enumerate(class_pat):
         pid = pat_map.get(p)
         if pid is None:
             pid = len(pat_list)
             pat_map[p] = pid
             pat_list.append(p)
-        upid[r] = pid
+        cpid[j] = pid
+    upid = cpid[ginv]
 
     star_cols = [ustar[uu_inv, si].tolist() for si in range(n_stars)]
     return star_cols, pat_list, upid[uu_inv]

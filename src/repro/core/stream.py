@@ -41,8 +41,9 @@ import numpy as np
 
 from .codec import _decompress_objects, open_container, read_structured
 from .encode import ParamDict, join_column, split_column, write_varint
-from .stages import LogzipConfig, StreamSession, run_pipeline
+from .stages import LogzipConfig, StreamSession, pack_stage, run_stages
 from .templates import TemplateStore
+from .timing import StageTimer
 
 STREAM_MAGIC = b"LZJS"
 CHUNK_MAGIC = b"CHNK"
@@ -91,15 +92,26 @@ class StreamingCompressor:
     ParaIDs stay stable across appends. With ``cfg=None`` an append
     inherits the container's level/kernel/format (appending with a
     different format would silently fragment the store).
+
+    ``pipeline=True`` (default) double-buffers chunks (DESIGN.md §10.4):
+    the entropy kernel + container write of chunk k run on a single
+    ordered worker thread while the main thread parses/tokenizes/matches
+    chunk k+1. The worker is the only writer of ``_f``/``index``/
+    ``_pos``, records stay in submission order, and ``close`` drains the
+    queue before the footer — the container bytes are identical to the
+    serial path.
     """
 
     def __init__(self, out, cfg: LogzipConfig | None = None, *,
                  chunk_lines: int = 8192, chunk_bytes: int = 8 << 20,
                  store: TemplateStore | None = None, append: bool = False,
-                 stage_times: dict | None = None):
+                 stage_times: dict | None = None, pipeline: bool = True):
         self.chunk_lines = int(chunk_lines)
         self.chunk_bytes = int(chunk_bytes)
         self.stage_times = stage_times
+        self.pipeline = bool(pipeline)
+        self._pool = None           # lazy single-worker executor
+        self._pending: list = []    # in-flight pack/write futures
         self._buf: list[str] = []
         self._buf_bytes = 0
         self._closed = False
@@ -176,11 +188,38 @@ class StreamingCompressor:
             self.feed_line(line)
 
     def flush_chunk(self) -> None:
-        """Cut the current buffer into one chunk record."""
+        """Cut the current buffer into one chunk record.
+
+        Compute (parse..encode, which advances the session store) runs
+        here; the entropy kernel + write are handed to the ordered
+        worker when ``pipeline`` is on, overlapping with the next
+        chunk's compute."""
         if not self._buf:
             return
-        ch = run_pipeline(self._buf, self.cfg, stage_times=self.stage_times,
-                          session=self.session)
+        ch = run_stages(self._buf, self.cfg, stage_times=self.stage_times,
+                        session=self.session)
+        n_chunk_lines = len(self._buf)
+        line_start = self.total_lines
+        self.total_lines += n_chunk_lines
+        self._buf = []
+        self._buf_bytes = 0
+        if self.pipeline:
+            if self._pool is None:
+                import concurrent.futures as cf
+
+                self._pool = cf.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="lzjs-pack")
+            # bound the in-flight window to one packed + one packing
+            # chunk (double buffering, not an unbounded queue)
+            while len(self._pending) > 1:
+                self._pending.pop(0).result()
+            self._pending.append(self._pool.submit(
+                self._pack_and_write, ch, line_start, n_chunk_lines))
+        else:
+            self._pack_and_write(ch, line_start, n_chunk_lines)
+
+    def _pack_and_write(self, ch, line_start: int, n_chunk_lines: int) -> None:
+        pack_stage(ch, self.cfg, StageTimer(self.stage_times))
         td = _frame(ch.delta_templates or [])
         pd = _frame(ch.delta_params or [])
         rec = bytearray(CHUNK_MAGIC)
@@ -194,22 +233,28 @@ class StreamingCompressor:
         self._f.write(bytes(rec))
         self.index.append({
             "offset": self._pos, "length": len(rec), "doffset": doffset,
-            "line_start": self.total_lines, "n_lines": len(self._buf),
+            "line_start": line_start, "n_lines": n_chunk_lines,
             "tpl_base": ch.tpl_base, "n_delta": ch.n_delta,
             "pd_base": ch.pd_base,
             "pd_delta": len(ch.delta_params or []),
             "match_rate": round(ch.match_rate, 4),
         })
         self._pos += len(rec)
-        self.total_lines += len(self._buf)
-        self._buf = []
-        self._buf_bytes = 0
+
+    def _drain(self) -> None:
+        """Wait for in-flight pack/write jobs (re-raising any error)."""
+        while self._pending:
+            self._pending.pop(0).result()
 
     # -- closing -------------------------------------------------------
     def close(self) -> dict:
         if self._closed:
             return self._summary
         self.flush_chunk()
+        self._drain()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
         footer = {
             "v": VERSION, "n_lines": self.total_lines,
             "level": self.cfg.level, "kernel": self.cfg.kernel,

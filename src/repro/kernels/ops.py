@@ -19,7 +19,12 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from . import ref
+from repro.core.textops import first_occurrence_unique, runs_of
+
+from .jitcache import bucket, bucket_stats, record_call, reset_counters  # noqa: F401 (re-exported)
+from .match_extract import match_extract as _match_extract
 from .simcount import simcount as _simcount
+from .tokenize import hash_powers, tokenize_hash
 from .wildcard_match import STAR_ID
 from .wildcard_match import wildcard_match as _wildcard_match
 
@@ -32,14 +37,49 @@ def simcount(logs, templates):
                      interpret=INTERPRET)
 
 
-def wildcard_match(logs, lens, templates, t_lens) -> jnp.ndarray:
-    """-> (N, K) bool match matrix."""
+def _pad_to(arr: np.ndarray, shape: tuple, fill=0) -> np.ndarray:
+    pads = [(0, s - d) for d, s in zip(arr.shape, shape)]
+    if not any(p[1] for p in pads):
+        return arr
+    return np.pad(arr, pads, constant_values=fill)
+
+
+def wildcard_match(logs, lens, templates, t_lens, *, use_buckets: bool = True) -> jnp.ndarray:
+    """-> (N, K) bool match matrix.
+
+    With ``use_buckets`` (default) every dynamic dimension is padded up
+    to a power-of-two bucket before hitting the jitted kernel, so
+    streaming chunks with drifting shapes reuse one compiled executable
+    per bucket (zero re-traces after warmup — ``jitcache.TRACE_COUNTS``
+    records the actual trace count). Padding is sliced/masked back out:
+    results are bit-identical to the unbucketed call.
+    """
+    logs = np.asarray(logs, np.int32)
+    lens_np = np.asarray(lens, np.int32)
+    templates = np.asarray(templates, np.int32)
+    t_lens_np = np.asarray(t_lens, np.int32)
+    n, t = logs.shape
+    k, tt = templates.shape
+    if use_buckets:
+        # floors absorb the normal drift of a streaming session (token
+        # width wobbling per chunk, the template store creeping past a
+        # power of two) so warm sessions never leave their bucket
+        nb, tb = bucket(n, 256), bucket(t, 32)
+        kb, ttb = bucket(k, 16), bucket(tt, 16)
+        record_call("wildcard_match", (nb, tb, kb, ttb))
+        out = _wildcard_match(
+            jnp.asarray(_pad_to(logs, (nb, tb))),
+            jnp.asarray(_pad_to(lens_np, (nb,))),
+            jnp.asarray(_pad_to(templates, (kb, ttb))),
+            jnp.asarray(np.pad(t_lens_np, (0, kb - k), constant_values=-1)),
+            interpret=INTERPRET,
+        )[:n, :k]
+        # the padded width tb would let stars absorb PAD columns of lines
+        # whose true length exceeds t: re-apply the host's truncation rule
+        return np.asarray(out).astype(bool) & (lens_np <= t)[:, None]
     out = _wildcard_match(
-        jnp.asarray(logs, jnp.int32),
-        jnp.asarray(lens, jnp.int32),
-        jnp.asarray(templates, jnp.int32),
-        jnp.asarray(t_lens, jnp.int32),
-        interpret=INTERPRET,
+        jnp.asarray(logs), jnp.asarray(lens_np), jnp.asarray(templates),
+        jnp.asarray(t_lens_np), interpret=INTERPRET,
     )
     return out.astype(bool)
 
@@ -123,25 +163,40 @@ def match_first_bucketed(ids: np.ndarray, lens: np.ndarray, templates: list[np.n
     return np.where(best < n_tpl, best, -1).astype(np.int32)
 
 
+_SHARDED_CACHE: dict[tuple, object] = {}
+
+
 def wildcard_match_sharded(logs, lens, templates, t_lens, mesh: Mesh, axis: str = "data"):
     """Pod-scale matching: logs sharded over ``axis``, templates replicated.
 
     Pure data parallelism — the compiled module contains no collectives
     (asserted in tests), which is the point: matching scales linearly
     with chips, as the paper's multi-worker experiment scales with cores.
+
+    The shard_map'd callable is cached per (mesh, axis): building it
+    fresh each call made every invocation re-trace even on identical
+    shapes (``tests/test_jitcache.py`` pins the trace count at 1 across
+    repeated same-shape calls).
     """
     from jax.experimental.shard_map import shard_map
 
-    def local(lg, ln, tp, tl):
-        return _wildcard_match(lg, ln[:, 0], tp, tl, interpret=INTERPRET)
+    from .jitcache import record_trace
 
-    fn = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(None, None), P(None, None)),
-        out_specs=P(axis, None),
-        check_rep=False,
-    )
+    key = (mesh, axis)
+    fn = _SHARDED_CACHE.get(key)
+    if fn is None:
+        def local(lg, ln, tp, tl):
+            record_trace("wildcard_match_sharded")
+            return _wildcard_match(lg, ln[:, 0], tp, tl, interpret=INTERPRET)
+
+        fn = jax.jit(shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(None, None), P(None, None)),
+            out_specs=P(axis, None),
+            check_rep=False,
+        ))
+        _SHARDED_CACHE[key] = fn
     return fn(
         jnp.asarray(logs, jnp.int32),
         jnp.asarray(lens, jnp.int32).reshape(-1, 1),
@@ -150,6 +205,160 @@ def wildcard_match_sharded(logs, lens, templates, t_lens, mesh: Mesh, axis: str 
     ).astype(bool)
 
 
+# ------------------------------------------- fused match+extract (device)
+
+def match_extract(ids: np.ndarray, lens: np.ndarray, templates: list[np.ndarray],
+                  *, use_buckets: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Fused kernel path: one launch -> (assign (N,) int32 lowest-id
+    matching template or -1, spans (N, n_slots, 2) int32).
+
+    numpy in/out convenience over ``kernels.match_extract``; shapes are
+    bucketed like ``wildcard_match``. Over-length lines are masked here
+    (where the true width is known) rather than in the kernel.
+    """
+    ids = np.asarray(ids, np.int32)
+    lens_np = np.asarray(lens, np.int32)
+    n, t = ids.shape
+    tmpl, tlens = pack_templates(templates)
+    n_slots = max([1] + [int((np.asarray(tp) == STAR_ID).sum()) for tp in templates])
+    if tmpl.shape[0] == 0 or n == 0:
+        return np.full(n, -1, np.int32), np.zeros((n, n_slots, 2), np.int32)
+    k, tt = tmpl.shape
+    if use_buckets:
+        nb, tb = bucket(n, 64), bucket(t, 32)
+        kb, ttb = bucket(k, 16), bucket(tt, 16)
+        record_call("match_extract", (nb, tb, kb, ttb))
+        ids_p, lens_p = _pad_to(ids, (nb, tb)), _pad_to(lens_np, (nb,))
+        tmpl_p = _pad_to(tmpl, (kb, ttb))
+        tlens_p = np.pad(tlens, (0, kb - k), constant_values=-1)
+    else:
+        ids_p, lens_p, tmpl_p, tlens_p = ids, lens_np, tmpl, tlens
+    assign, spans = _match_extract(
+        jnp.asarray(ids_p), jnp.asarray(lens_p), jnp.asarray(tmpl_p),
+        jnp.asarray(tlens_p), n_slots=n_slots, interpret=INTERPRET)
+    assign = np.asarray(assign[:n]).copy()
+    spans = np.asarray(spans[:n]).copy()
+    assign[lens_np > t] = -1  # truncated lines never match (host rule)
+    return assign, spans
+
+
+# --------------------------------------------- byte tokenizer (device)
+
+DEFAULT_DELIMITERS = " \t,;:="
+
+
+def pack_lines(lines: list[str], *, use_buckets: bool = True) -> tuple[np.ndarray, np.ndarray, list[bytes]]:
+    """utf-8 encode + pad lines into a (N, B) uint8 block.
+
+    With ``use_buckets`` BOTH axes are bucketed — padding the row count
+    here (outside the jit boundary) is what lets drifting batch sizes
+    share one compiled tokenizer executable; the kernel's own padding
+    happens inside the traced function, where it cannot help the cache.
+    Padded rows have length 0 and emit no tokens, so callers may simply
+    ignore rows >= len(lines).
+    """
+    enc = [l.encode("utf-8", "surrogateescape") for l in lines]
+    n = len(enc)
+    blens = np.fromiter((len(e) for e in enc), np.int32, n)
+    # +1 guarantees >= one trailing pad byte per row, so token runs never
+    # merge across rows when host code scans the flattened mask
+    width = int(blens.max(initial=1)) + 1
+    rows = n
+    if use_buckets:
+        width = bucket(width, 64)
+        rows = bucket(n, 256)
+        blens = np.pad(blens, (0, rows - n))
+    blocks = np.zeros((rows, width), np.uint8)
+    for i, e in enumerate(enc):
+        blocks[i, : len(e)] = np.frombuffer(e, np.uint8)
+    return blocks, blens, enc
+
+
+def device_tokenize(lines: list[str], delimiters: str = DEFAULT_DELIMITERS):
+    """Kernel-backed ``tokenize`` over a batch -> [(tokens, delims), ...].
+
+    Runs the byte tokenizer kernel for the boundary masks, then slices
+    token/delimiter strings on the host. ``reassemble`` of each result is
+    byte-identical to the input line (property-tested), and tokens agree
+    with ``core.tokenizer.tokenize`` for ASCII delimiter sets.
+    """
+    if not lines:
+        return []
+    blocks, blens, enc = pack_lines(lines)
+    record_call("tokenize_hash", blocks.shape)
+    pws = hash_powers(blocks.shape[1])
+    delims = tuple(ord(c) for c in delimiters)
+    mask, starts, _, _ = tokenize_hash(
+        jnp.asarray(blocks), jnp.asarray(blens),
+        jnp.asarray(pws[0][0]), jnp.asarray(pws[1][0]),
+        delims=delims, interpret=INTERPRET)
+    mask = np.asarray(mask, bool)
+    out = []
+    for i, e in enumerate(enc):
+        ts, te = runs_of(mask[i, : len(e)])
+        toks = [e[s:t2].decode("utf-8", "surrogateescape") for s, t2 in zip(ts, te)]
+        bounds = np.concatenate([[0], np.stack([ts, te], 1).ravel(), [len(e)]]) \
+            if len(ts) else np.array([0, len(e)])
+        dl = [e[bounds[2 * j]:bounds[2 * j + 1]].decode("utf-8", "surrogateescape")
+              for j in range(len(ts) + 1)]
+        out.append((toks, dl))
+    return out
+
+
+def device_encode_batch(contents: list[str], vocab, max_len: int,
+                        delimiters: str = DEFAULT_DELIMITERS,
+                        *, tight: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Kernel-backed twin of ``Vocab.encode_batch``: tokenize + hash on
+    device, intern only unseen 64-bit (2x uint32) hashes on the host.
+
+    -> (ids (N, W) int32, lens (N,) int32), equal to the host path on a
+    same-state vocab (property-tested).
+    """
+    n = len(contents)
+    if n == 0:
+        return np.zeros((0, 1), np.int32), np.zeros(0, np.int32)
+    blocks, blens, enc = pack_lines(contents)
+    width_b = blocks.shape[1]
+    record_call("tokenize_hash", blocks.shape)
+    pws = hash_powers(width_b)
+    delims = tuple(ord(c) for c in delimiters)
+    mask, starts, pref1, pref2 = tokenize_hash(
+        jnp.asarray(blocks), jnp.asarray(blens),
+        jnp.asarray(pws[0][0]), jnp.asarray(pws[1][0]),
+        delims=delims, interpret=INTERPRET)
+    mask = np.asarray(mask, bool)
+    starts_m = np.asarray(starts, bool)
+    pref1 = np.asarray(pref1)
+    pref2 = np.asarray(pref2)
+
+    rows, scol = np.nonzero(starts_m)             # token starts, row-major
+    # token ends from the flattened mask (rows never merge: pack_lines
+    # guarantees a trailing pad byte per row)
+    ecol = runs_of(mask.ravel())[1] - rows * mask.shape[1]
+    lens = np.bincount(rows, minlength=n).astype(np.int32)
+    width = max(1, min(max_len, int(lens.max(initial=1)))) if tight else max_len
+    col = np.arange(len(rows)) - np.concatenate([[0], np.cumsum(lens)])[rows]
+    keep = col < width
+    rows, scol, ecol, col = rows[keep], scol[keep], ecol[keep], col[keep]
+
+    def lane(pref, pw_inv):
+        lo = np.where(scol > 0,
+                      pref[rows, np.maximum(scol - 1, 0)], np.uint32(0))
+        return (pref[rows, ecol - 1] - lo) * pw_inv[scol]
+    h = lane(pref1, pws[0][1]).astype(np.uint64) << np.uint64(32)
+    h |= lane(pref2, pws[1][1]).astype(np.uint64)
+    tok_of, fo = first_occurrence_unique(h)
+    table = [enc[rows[i]][scol[i]:ecol[i]].decode("utf-8", "surrogateescape")
+             for i in fo.tolist()]
+    vid = np.fromiter((vocab.id(t) for t in table), np.int32, len(table)) \
+        if table else np.zeros(0, np.int32)
+    ids = np.zeros((n, width), np.int32)
+    ids[rows, col] = vid[tok_of]
+    return ids, lens
+
+
 # re-export oracles for tests
 simcount_ref = ref.simcount_ref
 wildcard_match_ref = ref.wildcard_match_ref
+match_extract_ref = ref.match_extract_ref
+tokenize_hash_ref = ref.tokenize_hash_ref

@@ -64,3 +64,54 @@ def wildcard_match_ref(
     idx = jnp.clip(lens, 0, t)[:, None, None]      # (N,1,1)
     matched = jnp.take_along_axis(col, idx.astype(jnp.int32), axis=2)[:, :, 0]
     return matched & (lens <= t)[:, None] & (t_lens >= 0)[None, :]
+
+
+def tokenize_hash_ref(blocks, lens, pw1, pw2, delims: tuple):
+    """Oracle for ``kernels.tokenize.tokenize_hash``: same mask / starts /
+    weighted-prefix-sum layout, straight jnp."""
+    blocks = jnp.asarray(blocks)
+    n, b = blocks.shape
+    bi = blocks.astype(jnp.int32)
+    pos = jnp.arange(b)[None, :]
+    in_len = pos < jnp.asarray(lens)[:, None]
+    is_delim = jnp.zeros((n, b), bool)
+    for d in delims:
+        is_delim = is_delim | (bi == d)
+    tok = in_len & ~is_delim
+    prev = jnp.concatenate([jnp.zeros((n, 1), bool), tok[:, :-1]], axis=1)
+    starts = tok & ~prev
+    prefs = []
+    for pw in (pw1, pw2):
+        w = (bi.astype(jnp.uint32) + 1) * jnp.asarray(pw)[None, :] * tok.astype(jnp.uint32)
+        prefs.append(jnp.cumsum(w, axis=1, dtype=jnp.uint32))
+    return tok.astype(jnp.int8), starts.astype(jnp.int8), prefs[0], prefs[1]
+
+
+def match_extract_ref(logs, lens, templates, t_lens, n_slots: int):
+    """Oracle for ``kernels.match_extract.match_extract``: lowest-id
+    matching template + per-star spans, via the *host* fused anchor
+    matcher (an independent implementation of the same DP tie-break —
+    kernel vs. anchor cross-validates both against the DP oracle)."""
+    import numpy as np
+
+    from repro.core.match import match_extract_one
+
+    logs = np.asarray(logs)
+    lens_np = np.asarray(lens)
+    t_lens = np.asarray(t_lens)
+    n = logs.shape[0]
+    assign = np.full(n, -1, np.int32)
+    spans = np.zeros((n, n_slots, 2), np.int32)
+    for k in range(np.asarray(templates).shape[0]):
+        if int(t_lens[k]) < 0:
+            continue  # over-length / padding sentinel: matches nothing
+        tpl = np.asarray(templates)[k, : int(t_lens[k])]
+        todo = assign < 0
+        if not todo.any():
+            break
+        ok, sp = match_extract_one(logs[todo], lens_np[todo], tpl, want_spans=True)
+        rows = np.flatnonzero(todo)[ok]
+        assign[rows] = k
+        if sp is not None and sp.shape[1]:
+            spans[rows, : sp.shape[1]] = sp[ok]
+    return assign, spans

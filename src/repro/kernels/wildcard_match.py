@@ -89,6 +89,9 @@ def wildcard_match(
     Templates with ``t_len < 0`` (grid padding, over-length sentinels
     from ``ops.pack_templates``) match nothing.
     """
+    from .jitcache import record_trace
+
+    record_trace("wildcard_match")
     n, t = logs.shape
     k, tt = templates.shape
     n_pad = -n % BN
