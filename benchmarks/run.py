@@ -46,6 +46,10 @@ def main() -> None:
           [{k: s[k] for k in ("chunk_lines", "cr_single", "cr_chunked", "cr_streaming",
                               "cr_gap_closed", "streaming_lines_per_sec",
                               "throughput_vs_chunked")}])
+    _emit("Compressed-domain query (template pushdown vs decompress-then-grep)",
+          [{k: r[k] for k in ("query", "hits", "hits_agree", "wall_s",
+                              "fraction_chunks_decoded", "speedup_vs_baseline")}
+           for r in report["query"]["queries"]])
     _emit("Table II — compression ratio (synthetic corpora; orderings are the target)",
           compression.table2(n))
     _emit("Fig 6 — compressed MB by logzip level (gzip kernel)",

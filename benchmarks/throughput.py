@@ -19,7 +19,14 @@ encode / ise.cluster / ise.match / spans / columns / pack / kernel), on:
   per-bucket call counts and the recompile (re-trace) counter after
   warmup — the jit-cache contract is zero, and ``check_perf_gate.py``
   fails CI if it regresses. On CPU the kernels run in interpret mode, so
-  this scenario's lines/sec calibrates *relative* cost only.
+  this scenario's lines/sec calibrates *relative* cost only;
+- a ``query`` scenario (ISSUE 4): compressed-domain grep over an LZJS
+  session with a rare-template burst — selective literal/regex queries, a
+  point param query and a field-equality query, each verified hit-for-hit
+  against decompress-then-grep, reporting matched-lines/s, the fraction
+  of chunks decoded and the speedup vs the baseline (gated by
+  ``check_perf_gate.py``: selective queries must decode <50% of chunks
+  and beat the baseline wall clock).
 
 ``SEED_REFERENCE`` is the seed-tree measurement of the same 40k-line
 HDFS / level-3 / gzip configuration in this container, recorded when the
@@ -149,6 +156,108 @@ def bench_streaming(lines: list[str], cfg: LogzipConfig, cr_single: float,
     }
 
 
+def bench_query(lines: list[str], cfg: LogzipConfig, chunk_lines: int) -> dict:
+    """Compressed-domain query scenario (ISSUE 4 acceptance): hit sets
+    must be byte-identical to decompress-then-grep; the selective query
+    must decode <50% of LZJS chunks and beat the baseline wall clock.
+
+    The corpus gets a localized rare-template burst (a "deployment
+    event": lines that exist only in a narrow region of the stream) —
+    the paper's own motivation for archiving logs is tracing exactly such
+    recurrent problems / security incidents later."""
+    import io
+    import re as _re
+    from collections import Counter
+
+    from repro.core import query as Q
+    from repro.core.parallel import decompress_parallel
+    from repro.core.stream import StreamingCompressor
+    from repro.core.tokenizer import LogFormat
+
+    n0 = len(lines)
+    at = (n0 * 7) // 10
+    burst = [
+        f"081109 203545 99 INFO dfs.FSNamesystem: Starting decommission of "
+        f"node /10.9.{i % 7}.{i % 11} remaining {i}"
+        for i in range(max(60, n0 // 400))
+    ]
+    lines = lines[:at] + burst + lines[at:]
+
+    buf = io.BytesIO()
+    with StreamingCompressor(buf, cfg, chunk_lines=chunk_lines) as sc:
+        sc.feed(lines)
+    blob = buf.getvalue()
+
+    t0 = time.perf_counter()
+    decoded = decompress_parallel(blob)
+    t_decompress = time.perf_counter() - t0
+    assert decoded == lines, "query benchmark: decode mismatch"
+
+    # a parameter value occurring on as few lines as possible (point query)
+    blk_counts = Counter(t for l in lines for t in l.split() if t.startswith("blk_"))
+    min_count = min(blk_counts.values())
+    rare_blk = min(t for t, c in blk_counts.items() if c == min_count)
+
+    fmt = LogFormat(cfg.format)
+    cols, ok_idx, _ = fmt.parse(lines)
+
+    def base_field_eq():
+        return [(i, lines[i]) for r, i in enumerate(ok_idx)
+                if cols["Level"][r] == "WARN"]
+
+    queries = [
+        ("selective_literal", Q.Substring("decommission"),
+         lambda: [(i, l) for i, l in enumerate(lines) if "decommission" in l]),
+        ("selective_regex", Q.Regex(r"decommission of node /10\.9\.\d+"),
+         lambda: [(i, l) for i, l in enumerate(lines)
+                  if _re.search(r"decommission of node /10\.9\.\d+", l)]),
+        ("param_value", Q.Substring(rare_blk),
+         lambda: [(i, l) for i, l in enumerate(lines) if rare_blk in l]),
+        ("field_eq", Q.FieldEq("Level", "WARN"), base_field_eq),
+    ]
+    rows = []
+    for name, q, base_fn in queries:
+        st = Q.QueryStats()
+        t0 = time.perf_counter()
+        hits = list(Q.search(blob, q, stats=st))
+        wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        base_hits = base_fn()
+        t_scan = time.perf_counter() - t0
+        base_wall = t_decompress + t_scan
+        rows.append({
+            "query": name,
+            "hits": len(hits),
+            "hits_agree": hits == base_hits,
+            "wall_s": round(wall, 4),
+            "matched_lines_per_sec": round(len(hits) / wall, 1) if wall else None,
+            "chunks_opened": st.chunks_opened,
+            "chunks_total": st.chunks_total,
+            "fraction_chunks_decoded": round(st.fraction_chunks_decoded, 4),
+            "rows_materialized": st.rows_materialized,
+            "baseline_wall_s": round(base_wall, 4),
+            "speedup_vs_baseline": round(base_wall / wall, 2) if wall else None,
+        })
+
+    st = Q.QueryStats()
+    t0 = time.perf_counter()
+    n_term = Q.count(blob, Q.Substring("terminating"), stats=st)
+    count_wall = time.perf_counter() - t0
+    assert n_term == sum(1 for l in lines if "terminating" in l)
+
+    return {
+        "n_lines": len(lines),
+        "chunk_lines": chunk_lines,
+        "baseline_decompress_s": round(t_decompress, 4),
+        "queries": rows,
+        "count_fast_path": {
+            "query": "count(terminating)", "hits": n_term,
+            "wall_s": round(count_wall, 4),
+            "rows_materialized": st.rows_materialized,
+        },
+    }
+
+
 def bench_device_pipeline(lines: list[str], fmt: str, n_chunks: int = 20) -> dict:
     """Kernel-path streaming session: bucketed static shapes must make
     chunks 3..n reuse compiled executables (zero re-traces after the
@@ -209,6 +318,7 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
     # interpret-mode kernels are slow on CPU: a small slice exercises the
     # bucketed jit cache without dominating the benchmark wall clock
     device = bench_device_pipeline(lines[: min(n_lines, 4000)], fmt)
+    query = bench_query(lines, cfg, chunk_lines=max(500, n_lines // 20))
     report = {
         "benchmark": "compress_throughput",
         "host": {"platform": platform.platform(), "python": platform.python_version()},
@@ -219,6 +329,7 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
         "results": results,
         "streaming": streaming,
         "device_pipeline": device,
+        "query": query,
     }
     return report
 
@@ -264,6 +375,16 @@ def main() -> None:
     print(f"device pipeline (interpret, {d['n_chunks']} chunks): "
           f"{d['lines_per_sec']:.0f} lines/s, traces {d['kernel_traces']}, "
           f"recompiles after warmup {d['recompiles_after_warmup']}")
+    qy = report["query"]
+    for r in qy["queries"]:
+        print(f"query[{r['query']:18s}] {r['hits']:5d} hits in {r['wall_s']:.3f}s  "
+              f"decoded {r['chunks_opened']}/{r['chunks_total']} chunks "
+              f"({r['fraction_chunks_decoded']:.0%})  "
+              f"{r['speedup_vs_baseline']:.1f}x vs decompress-then-grep  "
+              f"agree={r['hits_agree']}")
+    cf = qy["count_fast_path"]
+    print(f"query[count fast path ] {cf['hits']:5d} hits in {cf['wall_s']:.3f}s  "
+          f"materialized {cf['rows_materialized']} lines")
     print(f"wrote {out}")
 
 

@@ -13,7 +13,12 @@ Compares a freshly-measured throughput report against the committed
   stages under ``--stage-floor`` of the wall are ignored (noise);
 - if the fresh report carries a ``device_pipeline`` scenario, its
   recompile counter after warmup must be zero (the bucketed jit cache
-  contract).
+  contract);
+- if the fresh report carries a ``query`` scenario (ISSUE 4), every
+  query's hit set must agree with the decompress-then-grep baseline, and
+  the *selective* queries must decode under ``--query-decode-cap`` of the
+  LZJS chunks while beating the baseline wall clock (template pushdown
+  actually pushing down).
 
 Exit code 1 with a per-check report on any violation.
 
@@ -39,6 +44,8 @@ def main() -> int:
                     help="allowed relative growth of any stage's share of wall")
     ap.add_argument("--stage-floor", type=float, default=0.05,
                     help="ignore stages below this fraction of recorded wall")
+    ap.add_argument("--query-decode-cap", type=float, default=0.5,
+                    help="max fraction of LZJS chunks a selective query may decode")
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -85,6 +92,27 @@ def main() -> int:
         checks.append(line)
         if dp.get("recompiles_after_warmup", 0) != 0:
             failures.append(line)
+
+    qy = fresh.get("query")
+    if qy is not None:
+        for r in qy.get("queries", []):
+            line = f"query[{r['query']}] hit set == decompress-then-grep"
+            checks.append(line)
+            if not r.get("hits_agree"):
+                failures.append(line)
+            if not r["query"].startswith("selective"):
+                continue
+            frac = r.get("fraction_chunks_decoded", 1.0)
+            line = (f"query[{r['query']}] chunks decoded {frac:.0%} "
+                    f"(cap {args.query_decode_cap:.0%})")
+            checks.append(line)
+            if frac >= args.query_decode_cap:
+                failures.append(line)
+            spd = r.get("speedup_vs_baseline") or 0.0
+            line = f"query[{r['query']}] speedup vs baseline {spd:.2f}x (floor 1.00x)"
+            checks.append(line)
+            if spd <= 1.0:
+                failures.append(line)
 
     for c in checks:
         print(("FAIL  " if c in failures else "ok    ") + c)

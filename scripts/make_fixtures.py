@@ -1,0 +1,40 @@
+"""(Re)generate the golden-archive conformance fixtures under
+``tests/fixtures/`` (ISSUE 4 satellite).
+
+The committed archives lock the LZJF / LZJM / LZJS byte formats:
+``tests/test_conformance.py`` asserts today's ``compress()`` reproduces
+them byte-for-byte and that decoding restores the committed source
+lines. Run this ONLY on a deliberate format change, and record the
+change in DESIGN.md:
+
+    PYTHONPATH=src python scripts/make_fixtures.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+import fixture_defs as fd  # noqa: E402
+
+
+def main() -> None:
+    os.makedirs(fd.FIXTURE_DIR, exist_ok=True)
+    lines = fd.fixture_lines()
+    log_path = fd.fixture_path("log")
+    with open(log_path, "w", encoding="utf-8") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {log_path} ({len(lines)} lines)")
+    for ext, build in fd.BUILDERS.items():
+        blob = build(lines)
+        path = fd.fixture_path(ext)
+        with open(path, "wb") as f:
+            f.write(blob)
+        print(f"wrote {path} ({len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,8 +47,9 @@ from .stages import (
 _KERNEL_BY_ID = KERNEL_BY_ID  # back-compat alias
 
 __all__ = [
-    "FILE_MAGIC", "KERNELS", "LogzipConfig", "compress", "decompress",
-    "open_container", "read_structured", "compress_file", "decompress_file",
+    "FILE_MAGIC", "KERNELS", "LogzipConfig", "ChunkReader", "compress",
+    "decompress", "open_container", "read_structured", "compress_file",
+    "decompress_file",
 ]
 
 
@@ -116,35 +117,281 @@ def decompress(blob: bytes, *, ext_templates: list | None = None,
 
 
 def _decompress_objects(objects, meta, ext_templates=None, ext_params=None) -> list[str]:
-    n = meta["n"]
-    level = meta["level"]
+    return ChunkReader(objects, meta, ext_templates, ext_params).lines()
 
-    out: list[str | None] = [None] * n
-    bad_idx = (np.cumsum(decode_varints(objects["raw.idx"])) - 1).tolist() if objects["raw.idx"] else []
-    for i, line in zip(bad_idx, split_column(objects["raw.txt"])):
-        out[i] = line
-    ok_idx = [i for i in range(n) if out[i] is None]
 
-    from .tokenizer import LogFormat
+# ------------------------------------------------------------- ChunkReader
 
-    fmt = LogFormat(meta["format"]) if meta.get("format") else None
-    header_cols: dict[str, list[str]] = {}
-    if fmt is not None:
-        for f in fmt.fields:
-            if f == fmt.content_field:
-                continue
-            header_cols[f] = ColumnCodec(f"h.{f}").decode(objects, len(ok_idx))
+_UNSET = object()
 
-    contents = _decode_content(objects, meta, len(ok_idx), level, ext_templates, ext_params)
 
-    for r, i in enumerate(ok_idx):
-        if fmt is None:
-            out[i] = contents[r]
-        else:
-            vals = {f: header_cols[f][r] for f in header_cols}
-            vals[fmt.content_field] = contents[r]
-            out[i] = fmt.render(vals)
-    return out  # type: ignore[return-value]
+class ChunkReader:
+    """Lazy, column-selective access to one unpacked archive chunk.
+
+    ``decompress`` is ``ChunkReader(...).lines()``; the compressed-domain
+    query engine (``repro.core.query``, DESIGN.md §11) uses the partial
+    accessors instead — header columns, the EventID stream, one
+    template's parameter columns — and only assembles the rows it needs
+    (``line``/``content``), never paying for full-chunk materialization.
+
+    Every decoded object is cached on first touch, so repeated access
+    (e.g. several query conjuncts over the same chunk) decodes once.
+    Row coordinates: a chunk has ``n`` lines; ``bad`` positions hold
+    verbatim lines (header parse failures), the rest are *ok* rows
+    numbered 0..n_ok-1 in line order. Ok rows split into *unmatched*
+    rows (verbatim content) and *matched* rows, whose template ids come
+    from the ``events`` stream in matched order — the r-th row of
+    template ``k`` reads index ``r`` of that template's columns.
+    """
+
+    def __init__(self, objects, meta, ext_templates=None, ext_params=None):
+        self.objects = objects
+        self.meta = meta
+        self.n: int = meta["n"]
+        self.level: int = meta["level"]
+        self._ext_templates = ext_templates
+        self._ext_params = ext_params
+        self.bad_pos = (np.cumsum(decode_varints(objects["raw.idx"])) - 1).tolist() \
+            if objects["raw.idx"] else []
+        self.bad_txt = split_column(objects["raw.txt"])
+        self.n_ok = self.n - len(self.bad_pos)
+
+        from .tokenizer import LogFormat
+
+        self.fmt = LogFormat(meta["format"]) if meta.get("format") else None
+        self._ok_pos = None
+        self._header: dict[str, list[str]] = {}
+        self._events = None
+        self._un = None
+        self._matched_of_ok = None
+        self._templates = None
+        self._params = _UNSET
+        self._tpl: dict[int, dict] = {}
+        self._l1_contents = None
+        self._affixes = None
+
+    # -- row coordinate maps ------------------------------------------
+    @property
+    def ok_pos(self) -> np.ndarray:
+        """Line positions of the ok rows (ascending)."""
+        if self._ok_pos is None:
+            mask = np.ones(self.n, bool)
+            if self.bad_pos:
+                mask[np.asarray(self.bad_pos, np.int64)] = False
+            self._ok_pos = np.flatnonzero(mask)
+        return self._ok_pos
+
+    @property
+    def un_rows(self) -> np.ndarray:
+        """Ok-row indices whose content went verbatim (unmatched)."""
+        self._load_un()
+        return self._un[0]
+
+    @property
+    def un_txt(self) -> list[str]:
+        self._load_un()
+        return self._un[1]
+
+    def _load_un(self) -> None:
+        if self._un is None:
+            if self.level < 2:
+                self._un = (np.zeros(0, np.int64), [])
+            else:
+                idx = np.cumsum(decode_varints(self.objects["cun.idx"])) - 1 \
+                    if self.objects["cun.idx"] else np.zeros(0, np.int64)
+                self._un = (np.asarray(idx, np.int64), split_column(self.objects["cun.txt"]))
+
+    @property
+    def events(self) -> np.ndarray:
+        """Per matched ok-row (in row order) the chunk-local template id."""
+        if self._events is None:
+            self._events = np.asarray(decode_varints(self.objects["events"]), np.int64)
+        return self._events
+
+    @property
+    def matched_rows(self) -> np.ndarray:
+        """Ok-row indices of matched rows, aligned with ``events``."""
+        if self._matched_of_ok is None:
+            mask = np.ones(self.n_ok, bool)
+            un = self.un_rows
+            if len(un):
+                mask[un] = False
+            self._matched_of_ok = np.flatnonzero(mask)
+        return self._matched_of_ok
+
+    @property
+    def used_global(self) -> list[int] | None:
+        """Session-global EventID per chunk-local template id (LZJS
+        chunks); None when local ids are the only namespace."""
+        stream = self.meta.get("stream")
+        return list(stream["used"]) if stream is not None else None
+
+    # -- columns -------------------------------------------------------
+    def header_column(self, field: str) -> list[str]:
+        col = self._header.get(field)
+        if col is None:
+            if self.fmt is None or field not in self.fmt.fields or \
+                    field == self.fmt.content_field:
+                raise ValueError(f"no header field {field!r} in this archive")
+            col = ColumnCodec(f"h.{field}").decode(self.objects, self.n_ok)
+            self._header[field] = col
+        return col
+
+    @property
+    def templates(self) -> list[list[str | None]]:
+        """Chunk-local templates as token lists (None = wildcard)."""
+        if self._templates is None:
+            self._templates = resolve_templates(self.objects, self.meta, self._ext_templates)
+        return self._templates
+
+    @property
+    def paravalues(self) -> list[str] | None:
+        if self._params is _UNSET:
+            self._params = resolve_params(self.objects, self.meta, self._ext_params) \
+                if self.level >= 3 else None
+        return self._params
+
+    def _tpl_state(self, k: int) -> dict:
+        st = self._tpl.get(k)
+        if st is None:
+            tpl = self.templates[k]
+            gap_ids = decode_varints(self.objects[f"t{k}.gap.pid"])
+            st = {
+                "tpl": tpl,
+                "n_stars": sum(1 for t in tpl if t is None),
+                "count": len(gap_ids),
+                "gap_ids": gap_ids,
+                "gap_pats": None,
+                "stars": {},
+                "rows": None,       # matched-sequence indices (== column index)
+                "contents": None,
+            }
+            self._tpl[k] = st
+        return st
+
+    def template_rows(self, k: int) -> np.ndarray:
+        """Indices into the matched sequence for template ``k``; the i-th
+        entry is the row that reads index i of the template's columns."""
+        st = self._tpl_state(k)
+        if st["rows"] is None:
+            st["rows"] = np.flatnonzero(self.events == k)
+        return st["rows"]
+
+    def star_column(self, k: int, s: int) -> tuple[list[str], np.ndarray]:
+        """Parameter column ``s`` of template ``k`` -> (distinct values,
+        inverse): predicates evaluate on the distinct values only."""
+        st = self._tpl_state(k)
+        col = st["stars"].get(s)
+        if col is None:
+            col = ColumnCodec(f"t{k}.v{s}", None).decode_distinct(
+                self.objects, st["count"], self.paravalues)
+            st["stars"][s] = col
+        return col
+
+    def template_contents(self, k: int) -> list[str]:
+        """All contents of template ``k`` in column order (index aligns
+        with ``template_rows``)."""
+        st = self._tpl_state(k)
+        if st["contents"] is None:
+            if st["gap_pats"] is None:
+                st["gap_pats"] = [
+                    [unesc(g) for g in p.split("\x00")]
+                    for p in split_column(self.objects[f"t{k}.gap.pat"])
+                ]
+            stars = [self.star_column(k, s) for s in range(st["n_stars"])]
+            tpl = st["tpl"]
+            out: list[str] = []
+            for r in range(st["count"]):
+                gaps = st["gap_pats"][st["gap_ids"][r]]
+                pieces = [gaps[0]]
+                si = 0
+                for j, t in enumerate(tpl):
+                    if t is None:
+                        uniq, inv = stars[si]
+                        pieces.append(uniq[inv[r]])
+                        si += 1
+                    else:
+                        pieces.append(t)
+                    pieces.append(gaps[j + 1])
+                out.append("".join(pieces))
+            st["contents"] = out
+        return st["contents"]
+
+    # -- row assembly --------------------------------------------------
+    def content(self, ok_row: int) -> str:
+        """Message content of one ok row."""
+        if self.level < 2:
+            if self._l1_contents is None:
+                self._l1_contents = split_column(self.objects["content.txt"])
+            return self._l1_contents[ok_row]
+        self._load_un()
+        un_rows, un_txt = self._un
+        j = int(np.searchsorted(un_rows, ok_row))
+        if j < len(un_rows) and un_rows[j] == ok_row:
+            return un_txt[j]
+        m = int(np.searchsorted(self.matched_rows, ok_row))
+        k = int(self.events[m])
+        r = int(np.searchsorted(self.template_rows(k), m))
+        return self.template_contents(k)[r]
+
+    def header_affixes(self) -> tuple[list[str], list[str]]:
+        """Per ok row the rendered line text before / after the content
+        field -> (prefixes, suffixes). Empty strings when there is no
+        header format."""
+        if self._affixes is None:
+            if self.fmt is None:
+                empty = [""] * self.n_ok
+                self._affixes = (empty, empty)
+            else:
+                fmt = self.fmt
+                ci = fmt.fields.index(fmt.content_field)
+                pre_fields = fmt.fields[:ci]
+                post_fields = fmt.fields[ci + 1:]
+                segs = fmt._segments
+                pre_cols = [self.header_column(f) for f in pre_fields]
+                post_cols = [self.header_column(f) for f in post_fields]
+                pres, posts = [], []
+                for r in range(self.n_ok):
+                    parts = [segs[0]]
+                    for j, col in enumerate(pre_cols):
+                        parts.append(col[r])
+                        parts.append(segs[j + 1])
+                    pres.append("".join(parts))
+                    parts = []
+                    for j, col in enumerate(post_cols):
+                        parts.append(col[r])
+                        parts.append(segs[ci + 2 + j])
+                    posts.append(segs[ci + 1] + "".join(parts))
+                self._affixes = (pres, posts)
+        return self._affixes
+
+    def line(self, pos: int) -> str:
+        """Fully materialized line at chunk position ``pos``."""
+        j = int(np.searchsorted(np.asarray(self.bad_pos, np.int64), pos)) \
+            if self.bad_pos else 0
+        if self.bad_pos and j < len(self.bad_pos) and self.bad_pos[j] == pos:
+            return self.bad_txt[j]
+        r = int(np.searchsorted(self.ok_pos, pos))
+        content = self.content(r)
+        if self.fmt is None:
+            return content
+        pre, post = self.header_affixes()
+        return pre[r] + content + post[r]
+
+    def lines(self) -> list[str]:
+        """Full decode — the ``decompress`` path."""
+        out: list[str | None] = [None] * self.n
+        for i, txt in zip(self.bad_pos, self.bad_txt):
+            out[i] = txt
+        if self.n_ok:
+            if self.fmt is None:
+                for r, i in enumerate(self.ok_pos.tolist()):
+                    out[i] = self.content(r)
+            else:
+                pre, post = self.header_affixes()
+                for r, i in enumerate(self.ok_pos.tolist()):
+                    out[i] = pre[r] + self.content(r) + post[r]
+        return out  # type: ignore[return-value]
 
 
 def resolve_templates(objects, meta, ext_templates=None) -> list[list[str | None]]:
@@ -191,63 +438,6 @@ def resolve_params(objects, meta, ext_params=None) -> list[str] | None:
     if "paradict" in objects:
         return ParamDict.decode(objects["paradict"])
     return None
-
-
-def _decode_content(objects, meta, n_ok: int, level: int,
-                    ext_templates=None, ext_params=None) -> list[str]:
-    if level == 1:
-        return split_column(objects["content.txt"])
-
-    contents: list[str | None] = [None] * n_ok
-    un_idx = (np.cumsum(decode_varints(objects["cun.idx"])) - 1).tolist() if objects["cun.idx"] else []
-    for i, c in zip(un_idx, split_column(objects["cun.txt"])):
-        contents[i] = c
-
-    templates = resolve_templates(objects, meta, ext_templates)
-    events = decode_varints(objects["events"])
-
-    paravalues = resolve_params(objects, meta, ext_params) if level >= 3 else None
-
-    # per-template decoded columns + cursors
-    per_tpl: dict[int, dict] = {}
-
-    def tpl_state(k: int) -> dict:
-        st = per_tpl.get(k)
-        if st is None:
-            tpl = templates[k]
-            n_stars = sum(1 for t in tpl if t is None)
-            count = len(decode_varints(objects[f"t{k}.gap.pid"]))
-            stars = [
-                ColumnCodec(f"t{k}.v{s}", None).decode(objects, count, paravalues)
-                for s in range(n_stars)
-            ]
-            gap_pats = split_column(objects[f"t{k}.gap.pat"])
-            gap_ids = decode_varints(objects[f"t{k}.gap.pid"])
-            st = {"tpl": tpl, "stars": stars, "gap_pats": gap_pats, "gap_ids": gap_ids, "cur": 0}
-            per_tpl[k] = st
-        return st
-
-    ev_cursor = 0
-    for i in range(n_ok):
-        if contents[i] is not None:
-            continue
-        k = events[ev_cursor]
-        ev_cursor += 1
-        st = tpl_state(k)
-        r = st["cur"]
-        st["cur"] = r + 1
-        gaps = [unesc(g) for g in st["gap_pats"][st["gap_ids"][r]].split("\x00")]
-        pieces = [gaps[0]]
-        si = 0
-        for j, t in enumerate(st["tpl"]):
-            if t is None:
-                pieces.append(st["stars"][si][r])
-                si += 1
-            else:
-                pieces.append(t)
-            pieces.append(gaps[j + 1])
-        contents[i] = "".join(pieces)
-    return contents  # type: ignore[return-value]
 
 
 # ------------------------------------------------------- structured access

@@ -363,30 +363,54 @@ class ColumnCodec:
         return objs
 
     def decode(self, objs: dict[str, bytes], n: int, paravalues: list[str] | None = None) -> list[str]:
+        uniq, inv = self.decode_distinct(objs, n, paravalues)
+        return [uniq[j] for j in inv]
+
+    def decode_distinct(
+        self, objs: dict[str, bytes], n: int, paravalues: list[str] | None = None,
+    ) -> tuple[list[str], np.ndarray]:
+        """Column-selective decode without full row materialization:
+        -> (distinct values in first-occurrence order, inverse indices).
+
+        The expensive per-row work (sub-field merge + unescape, and for
+        Level 3 the ParaID -> string lookups) runs once per *distinct*
+        (pattern, parts) row — log parameter columns are dominated by
+        repeats, and the compressed-domain query engine evaluates
+        predicates on the distinct values only, broadcasting the verdict
+        through ``inverse``."""
         pat_list = split_column(objs[f"{self.name}.pat"])
         pat_ids = decode_varints(objs[f"{self.name}.pid"])
         assert len(pat_ids) == n, (self.name, len(pat_ids), n)
-        cursors: dict[tuple[int, int], int] = {}
-        slot_cols: dict[tuple[int, int], list[str]] = {}
-        out: list[str] = []
-        for pid in pat_ids:
-            pattern = pat_list[pid]
-            n_slots = pattern.count("\x00")
-            parts = []
-            for k in range(n_slots):
-                col = slot_cols.get((pid, k))
-                if col is None:
+        cursors: dict[int, int] = {}
+        slot_cols: dict[int, list[list]] = {}  # pid -> per-slot raw columns
+        seen: dict[tuple, int] = {}
+        uniq: list[str] = []
+        inv = np.empty(n, np.int64)
+        for r, pid in enumerate(pat_ids):
+            cols = slot_cols.get(pid)
+            if cols is None:
+                n_slots = pat_list[pid].count("\x00")
+                cols = []
+                for k in range(n_slots):
                     raw = objs[f"{self.name}.p{pid}s{k}"]
-                    if paravalues is not None:
-                        col = [paravalues[i] for i in decode_varints(raw)]
-                    else:
-                        col = split_column(raw)
-                    slot_cols[(pid, k)] = col
-                c = cursors.get((pid, k), 0)
-                parts.append(col[c])
-                cursors[(pid, k)] = c + 1
-            out.append(unesc(merge_subfields(pattern, parts)))
-        return out
+                    # keep Level-3 columns as raw ParaIDs: the dedup key
+                    # hashes ints and values are only looked up once per
+                    # distinct row below
+                    cols.append(decode_varints(raw) if paravalues is not None
+                                else split_column(raw))
+                slot_cols[pid] = cols
+            c = cursors.get(pid, 0)
+            cursors[pid] = c + 1
+            key = (pid, *(col[c] for col in cols))
+            j = seen.get(key)
+            if j is None:
+                parts = ([paravalues[i] for i in key[1:]] if paravalues is not None
+                         else list(key[1:]))
+                j = len(uniq)
+                seen[key] = j
+                uniq.append(unesc(merge_subfields(pat_list[pid], parts)))
+            inv[r] = j
+        return uniq, inv
 
 
 # ------------------------------------------------------------- container

@@ -1,0 +1,892 @@
+"""Compressed-domain query engine: template-pushdown grep/extract over
+logzip archives (DESIGN.md §11).
+
+The paper archives logs *so they can be analyzed later* — yet a classic
+archive answers every query by decompressing every line.  Because logzip
+factors a corpus into a few hundred templates plus parameter columns,
+most predicates can be decided against the templates instead of the
+lines.  Queries run in three stages:
+
+1. **Template classification** — each predicate is matched against the
+   template set; every template (and hence every EventID) is classified
+   ALWAYS-match (the predicate is implied by the template's literal
+   tokens), NEVER-match (no instantiation of the template can satisfy
+   it), or MAYBE (param-dependent).
+2. **Chunk skipping** — LZJS chunks carry a footer-index *manifest*
+   (``repro.core.stream.chunk_manifest``): the chunk's EventIDs, its
+   verbatim-line texts (when small) and per-header-field summaries.  A
+   chunk whose manifest proves "no line here can match" is skipped
+   without touching its payload.  LZJM batch archives have no manifest
+   and degrade to sequential chunk visits (LZJF to a single chunk).
+3. **Column-selective evaluation** — for MAYBE templates the engine
+   decodes only the relevant ``ColumnCodec`` parameter columns
+   (``ChunkReader.star_column``, distinct values only) and evaluates the
+   predicate per *distinct* value; full lines are materialized only for
+   final hits and for the rare rows no cheap rule decides.
+
+Soundness: every shortcut is conservative.  ``search`` returns exactly
+the (line_no, line) pairs a decompress-then-grep would — property-tested
+against a plain-Python grep in ``tests/test_roundtrip_fuzz.py``.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import re
+from dataclasses import dataclass, field as dfield
+
+import numpy as np
+
+from .codec import ChunkReader, FILE_MAGIC, open_container
+from .tokenizer import DEFAULT_DELIMITERS, LogFormat
+
+try:  # Python >= 3.11
+    from re import _parser as _sre_parser
+except ImportError:  # pragma: no cover - Python 3.10
+    import sre_parse as _sre_parser
+
+ALWAYS, MAYBE, NEVER = 1, 0, -1
+_CLASS_NAMES = {ALWAYS: "always", MAYBE: "maybe", NEVER: "never"}
+
+_DELIMS = frozenset(DEFAULT_DELIMITERS)
+_WS = frozenset(" \t\n\r\x0b\x0c")
+_DELIM_RUN_RE = re.compile(f"[{re.escape(DEFAULT_DELIMITERS)}]+")
+
+__all__ = [
+    "Substring", "Regex", "FieldEq", "LineRange", "EventIs", "And",
+    "QueryStats", "search", "count", "sample", "explain", "extract_records",
+    "classify_template", "ALWAYS", "MAYBE", "NEVER",
+]
+
+
+# ------------------------------------------------------------- predicates
+
+@dataclass(frozen=True)
+class Substring:
+    """Fixed-string containment over the full rendered line."""
+
+    s: str
+
+
+@dataclass(frozen=True)
+class Regex:
+    """``re.search`` over the full rendered line."""
+
+    pattern: str
+
+
+@dataclass(frozen=True)
+class FieldEq:
+    """Header-field equality (lines that failed header parse never match)."""
+
+    field: str
+    value: str
+
+
+@dataclass(frozen=True)
+class LineRange:
+    """Global line number in ``[start, stop)``."""
+
+    start: int
+    stop: int
+
+
+@dataclass(frozen=True)
+class EventIs:
+    """Template (EventID) equality — session-global id for LZJS archives,
+    chunk-local id otherwise. Verbatim/unmatched lines never match."""
+
+    event: int
+
+
+@dataclass(frozen=True)
+class And:
+    preds: tuple
+
+    def __init__(self, *preds):
+        object.__setattr__(self, "preds", tuple(preds))
+
+
+def _flatten(query) -> list:
+    if isinstance(query, And):
+        out = []
+        for p in query.preds:
+            out.extend(_flatten(p))
+        if not out:
+            raise ValueError("empty conjunction")
+        return out
+    if isinstance(query, (Substring, Regex, FieldEq, LineRange, EventIs)):
+        return [query]
+    raise ValueError(f"not a query predicate: {query!r}")
+
+
+# ------------------------------------------------- template classification
+
+def _delim_free(s: str) -> bool:
+    return not any(c in _DELIMS for c in s)
+
+
+def _spanning_feasible(s: str, toks: list[str]) -> bool:
+    """Can ``s`` (which contains delimiter chars) occur in a content whose
+    token sequence is exactly ``toks`` (with arbitrary delimiter runs)?
+
+    Splitting ``s`` on delimiter runs gives segments that must align with
+    the token sequence: interior segments are complete tokens, the edge
+    segments a token suffix / prefix (empty edges start or end inside a
+    gap, which is always realizable since gaps are arbitrary)."""
+    segs = _DELIM_RUN_RE.split(s)
+    head, mid, tail = segs[0], segs[1:-1], segs[-1]
+    m, k = len(toks), len(mid)
+    for j in range(m - k + 1):
+        if toks[j:j + k] != mid:
+            continue
+        if head and not (j > 0 and toks[j - 1].endswith(head)):
+            continue
+        if tail and not (j + k < m and toks[j + k].startswith(tail)):
+            continue
+        return True
+    return False
+
+
+def classify_template(s: str, template: tuple) -> int:
+    """Classify substring ``s`` against one template's *content*.
+
+    ALWAYS: every instantiation contains ``s`` (it sits inside a literal
+    token). NEVER: no instantiation can contain it. MAYBE: depends on the
+    parameter values (or, for delimiter-spanning strings, on the gaps).
+    """
+    toks = [t for t in template if t is not None]
+    has_star = len(toks) < len(template)
+    if _delim_free(s):
+        if any(s in t for t in toks):
+            return ALWAYS
+        return MAYBE if has_star else NEVER
+    if has_star:
+        return MAYBE  # any wildcard can absorb arbitrary tokens
+    return MAYBE if _spanning_feasible(s, toks) else NEVER
+
+
+def _required_literals(pattern: str) -> list[str]:
+    """Literal substrings every match of ``pattern`` must contain
+    (conservative: [] when nothing can be guaranteed). Literal runs are
+    split on delimiter characters — each delimiter-free fragment is still
+    required, and delimiter-free needles get the strongest pushdown
+    (token containment + the param-dictionary screen)."""
+    try:
+        parsed = _sre_parser.parse(pattern)
+    except Exception:
+        return []
+    if parsed.state.flags & re.IGNORECASE:
+        return []
+    lits: list[str] = []
+    bail = False
+
+    def walk(data) -> None:
+        nonlocal bail
+        run: list[str] = []
+
+        def flush():
+            if run:
+                lits.append("".join(run))
+                run.clear()
+
+        for op, av in data:
+            name = str(op)
+            if name == "LITERAL":
+                run.append(chr(av))
+            elif name == "SUBPATTERN":
+                flush()
+                # av = (group, add_flags, del_flags, subpattern): a scoped
+                # (?i:...) carries IGNORECASE here, not in state.flags
+                if av[1] & re.IGNORECASE:
+                    bail = True
+                    return
+                walk(av[3])
+            elif name in ("MAX_REPEAT", "MIN_REPEAT"):
+                flush()
+                if av[0] >= 1:
+                    walk(av[2])
+            else:
+                # BRANCH / IN / ANY / AT / assertions: nothing guaranteed
+                flush()
+        flush()
+
+    walk(parsed)
+    if bail:
+        return []
+    out: list[str] = []
+    for l in lits:
+        out.extend(f for f in _DELIM_RUN_RE.split(l) if f)
+    return out
+
+
+# -------------------------------------------------- header-format analysis
+
+def _format_groups(fmt: LogFormat):
+    """Whitespace-free run structure of a rendered line.
+
+    Returns (header_groups, boundary_safe): each group is the list of
+    items — ("lit", text) / ("field", name) — forming one maximal
+    whitespace-free run of the rendered line; groups containing the
+    content field are dropped. ``boundary_safe`` is True when the content
+    field forms a run on its own, i.e. a whitespace-free needle can never
+    straddle the header/content boundary."""
+    items: list[tuple] = []
+    segs = fmt._segments
+    if segs[0]:
+        items.append(("lit", segs[0]))
+    for f, seg in zip(fmt.fields, segs[1:]):
+        items.append(("content",) if f == fmt.content_field else ("field", f))
+        if seg:
+            items.append(("lit", seg))
+    groups: list[list] = []
+    cur: list = []
+    for it in items:
+        if it[0] == "lit":
+            parts = re.split(r"\s+", it[1])
+            if len(parts) == 1:
+                cur.append(it)
+                continue
+            if parts[0]:
+                cur.append(("lit", parts[0]))
+            groups.append(cur)
+            for midpart in parts[1:-1]:
+                if midpart:
+                    groups.append([("lit", midpart)])
+            cur = [("lit", parts[-1])] if parts[-1] else []
+        else:
+            cur.append(it)
+    groups.append(cur)
+    groups = [g for g in groups if g]
+    header_groups = []
+    boundary_safe = True
+    for g in groups:
+        if any(it[0] == "content" for it in g):
+            if len(g) > 1:
+                boundary_safe = False
+        else:
+            header_groups.append(g)
+    return header_groups, boundary_safe
+
+
+def _header_possible_static(s: str, fields_mf: dict, ctx: "_Ctx") -> bool:
+    """Could ``s`` (whitespace-free) occur inside the header region of
+    some line of a chunk, judging only by the chunk's per-field manifest
+    summaries? Conservative: True whenever unsure."""
+    for g in ctx.header_groups:
+        fnames = [it[1] for it in g if it[0] == "field"]
+        lits = [it[1] if it[0] == "lit" else None for it in g]
+        if len(fnames) == 1:
+            entry = fields_mf.get(fnames[0]) or {}
+            vals = entry.get("v")
+            if vals is not None:
+                assembled = ["".join(v if t is None else t for t in lits)
+                             for v in vals]
+                if any(s in a for a in assembled):
+                    return True
+                continue
+        charset = set()
+        unknown = False
+        for it in g:
+            if it[0] == "lit":
+                charset |= set(it[1])
+                continue
+            entry = fields_mf.get(it[1]) or {}
+            if entry.get("v") is not None:
+                charset |= set("".join(entry["v"]))
+            elif entry.get("c") is not None:
+                charset |= set(entry["c"])
+            else:
+                unknown = True
+                break
+        if unknown or all(c in charset for c in s):
+            return True
+    return False
+
+
+# --------------------------------------------------------------- context
+
+_ALNUM_RUN_RE = re.compile(r"[0-9A-Za-z]+")
+
+
+class _Ctx:
+    """Per-query, per-archive evaluation state (caches + format info)."""
+
+    def __init__(self, fmt: LogFormat | None, session_templates=None,
+                 session_params=None):
+        self.fmt = fmt
+        self.session_templates = session_templates  # global tuples (LZJS)
+        self.session_params = session_params        # level-3 ParamDict values
+        if fmt is not None:
+            self.header_groups, self.boundary_safe = _format_groups(fmt)
+        else:
+            self.header_groups, self.boundary_safe = [], True
+        self._cls: dict[tuple, int] = {}
+        self._contains: dict[tuple, bool] = {}
+        self._lits: dict[str, list[str]] = {}
+        self._param_first: dict[str, int] | None = None
+        self._thr: dict[str, int | None] = {}
+
+    def classify(self, s: str, template) -> int:
+        key = (s, tuple(template))
+        c = self._cls.get(key)
+        if c is None:
+            c = classify_template(s, key[1])
+            self._cls[key] = c
+        return c
+
+    def contains(self, s: str, value: str) -> bool:
+        key = (s, value)
+        c = self._contains.get(key)
+        if c is None:
+            c = s in value
+            self._contains[key] = c
+        return c
+
+    def required_literals(self, pattern: str) -> list[str]:
+        lits = self._lits.get(pattern)
+        if lits is None:
+            lits = _required_literals(pattern)
+            self._lits[pattern] = lits
+        return lits
+
+    def param_threshold(self, s: str):
+        """Smallest session-ParamDict length at which ``s`` could occur
+        inside a level-3 parameter value; None if it never can.
+
+        A Level-3 star value is its alphanumeric runs (each interned in
+        the session ``ParamDict``) joined by non-alphanumeric connectors,
+        so ``s`` can only appear in one if every interior alphanumeric
+        run of ``s`` is an exact dictionary value and its edge runs are
+        substrings of dictionary values. The first dictionary index where
+        that holds bounds which chunks (via their ``pd_end``) can realize
+        ``s`` — chunks written before the needle's parts existed are
+        skipped (the CLP-style dictionary screen, per chunk)."""
+        if self.session_params is None:
+            return 0  # no dictionary to consult: possible everywhere
+        if s in self._thr:
+            return self._thr[s]
+        params = self.session_params
+        if self._param_first is None:
+            first: dict[str, int] = {}
+            for i, v in enumerate(params):
+                first.setdefault(v, i)
+            self._param_first = first
+        runs = list(_ALNUM_RUN_RE.finditer(s))
+        thr: int | None = 0
+        for m in runs:
+            run = m.group()
+            if m.start() > 0 and m.end() < len(s):
+                i = self._param_first.get(run)  # complete part: exact member
+            else:
+                i = next((j for j, v in enumerate(params) if run in v), None)
+            if i is None:
+                thr = None
+                break
+            thr = max(thr, i + 1)
+        self._thr[s] = thr
+        return thr
+
+
+# ------------------------------------------------------------- evaluation
+#
+# Per chunk every conjunct produces a tri-state vector over the chunk's
+# lines: 1 = provably matches, -1 = provably not, 0 = unknown.  The
+# conjunction is the elementwise minimum.  Rows left at 0 are resolved by
+# materializing the line and running the exact predicate — so every
+# shortcut above only has to be *conservative*, never exact.
+
+
+def _tri_substring(pred: Substring, ctx: _Ctx, cr: ChunkReader,
+                   manifest: dict | None) -> np.ndarray:
+    s = pred.s
+    n = cr.n
+    tri = np.zeros(n, np.int8)
+    for pos, txt in zip(cr.bad_pos, cr.bad_txt):
+        tri[pos] = 1 if s in txt else -1
+    if cr.n_ok == 0:
+        return tri
+
+    ws_free = not any(c in _WS for c in s)
+    exact_split = ctx.fmt is None or (ws_free and ctx.boundary_safe)
+
+    # header side: decode only when the manifest cannot rule it out
+    hdr_hit = None
+    if ctx.fmt is not None:
+        hdr_needed = True
+        if manifest is not None and ws_free and ctx.boundary_safe:
+            hdr_needed = _header_possible_static(
+                s, manifest.get("fields") or {}, ctx)
+        if hdr_needed and exact_split:
+            pre, post = cr.header_affixes()
+            hdr_hit = np.fromiter(
+                ((s in pre[r]) or (s in post[r]) for r in range(cr.n_ok)),
+                bool, count=cr.n_ok)
+        elif not hdr_needed:
+            hdr_hit = np.zeros(cr.n_ok, bool)
+        # else: header undecidable per-row -> rows stay UNKNOWN below
+
+    # content side per ok row: +1 / -1 / 0
+    content = np.zeros(cr.n_ok, np.int8)
+    if cr.level < 2:
+        for r in range(cr.n_ok):
+            content[r] = 1 if ctx.contains(s, cr.content(r)) else -1
+    else:
+        un = cr.un_rows
+        if len(un):
+            content[un] = [1 if ctx.contains(s, t) else -1 for t in cr.un_txt]
+        matched = cr.matched_rows
+        events = cr.events
+        for k in np.unique(events).tolist() if len(events) else []:
+            tpl = tuple(cr.templates[k])
+            cls = ctx.classify(s, tpl)
+            rows_m = cr.template_rows(k)
+            rows = matched[rows_m]
+            if cls == ALWAYS:
+                content[rows] = 1
+            elif cls == NEVER:
+                content[rows] = -1
+            elif _delim_free(s):
+                # param pushdown: a delimiter-free needle can only live
+                # inside a token, i.e. inside some wildcard's value here
+                hit = np.zeros(len(rows_m), bool)
+                n_stars = sum(1 for t in tpl if t is None)
+                for si in range(n_stars):
+                    uniq, inv = cr.star_column(k, si)
+                    uhit = np.fromiter((ctx.contains(s, u) for u in uniq),
+                                       bool, count=len(uniq))
+                    hit |= uhit[inv]
+                content[rows] = np.where(hit, 1, -1).astype(np.int8)
+            # else: gap-dependent -> leave 0 (resolved by materialization)
+
+    ok_tri = np.zeros(cr.n_ok, np.int8)
+    if ctx.fmt is None:
+        ok_tri = content
+    elif hdr_hit is not None and exact_split:
+        ok_tri = np.where(hdr_hit | (content == 1), 1,
+                          np.where(content == -1, -1, 0)).astype(np.int8)
+    else:
+        ok_tri = np.where(content == 1, 1, 0).astype(np.int8)
+    tri[cr.ok_pos] = ok_tri
+    return tri
+
+
+def _tri_regex(pred: Regex, rx, ctx: _Ctx, cr: ChunkReader,
+               manifest: dict | None) -> np.ndarray:
+    tri = np.zeros(cr.n, np.int8)
+    for pos, txt in zip(cr.bad_pos, cr.bad_txt):
+        tri[pos] = 1 if rx.search(txt) else -1
+    # required literals prune rows; survivors stay UNKNOWN (re.search on
+    # the materialized line decides them)
+    for lit in ctx.required_literals(pred.pattern):
+        lt = _tri_substring(Substring(lit), ctx, cr, manifest)
+        tri[(lt == -1) & (tri == 0)] = -1
+    return tri
+
+
+def _tri_field_eq(pred: FieldEq, ctx: _Ctx, cr: ChunkReader) -> np.ndarray:
+    tri = np.full(cr.n, -1, np.int8)
+    if cr.n_ok:
+        col = cr.header_column(pred.field)
+        eq = np.fromiter((v == pred.value for v in col), bool, count=cr.n_ok)
+        tri[cr.ok_pos] = np.where(eq, 1, -1).astype(np.int8)
+    return tri
+
+
+def _tri_event_is(pred: EventIs, cr: ChunkReader) -> np.ndarray:
+    tri = np.full(cr.n, -1, np.int8)
+    if cr.level >= 2 and len(cr.events):
+        used = cr.used_global
+        ev = cr.events if used is None else np.asarray(used, np.int64)[cr.events]
+        rows = cr.ok_pos[cr.matched_rows]
+        tri[rows] = np.where(ev == pred.event, 1, -1).astype(np.int8)
+    return tri
+
+
+def _tri_line_range(pred: LineRange, cr: ChunkReader, line_start: int) -> np.ndarray:
+    nos = line_start + np.arange(cr.n)
+    return np.where((nos >= pred.start) & (nos < pred.stop), 1, -1).astype(np.int8)
+
+
+def _chunk_tri(pred, ctx: _Ctx, cr: ChunkReader, line_start: int,
+               manifest: dict | None) -> np.ndarray:
+    if isinstance(pred, Substring):
+        return _tri_substring(pred, ctx, cr, manifest)
+    if isinstance(pred, Regex):
+        return _tri_regex(pred, re.compile(pred.pattern), ctx, cr, manifest)
+    if isinstance(pred, FieldEq):
+        return _tri_field_eq(pred, ctx, cr)
+    if isinstance(pred, EventIs):
+        return _tri_event_is(pred, cr)
+    if isinstance(pred, LineRange):
+        return _tri_line_range(pred, cr, line_start)
+    raise ValueError(f"unknown predicate {pred!r}")
+
+
+def _test_line(pred, line: str, line_no: int) -> bool:
+    """Exact oracle on a fully materialized line (UNKNOWN resolution)."""
+    if isinstance(pred, Substring):
+        return pred.s in line
+    if isinstance(pred, Regex):
+        return re.search(pred.pattern, line) is not None
+    if isinstance(pred, LineRange):
+        return pred.start <= line_no < pred.stop
+    raise RuntimeError(f"{type(pred).__name__} decides exactly; no oracle needed")
+
+
+# ----------------------------------------------------- chunk-level pruning
+
+def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
+                    line_start: int, n_lines: int | None) -> bool:
+    """May any line of this chunk satisfy ``pred``?  Judged WITHOUT
+    touching the chunk payload; conservative True when unsure."""
+    if isinstance(pred, LineRange):
+        if n_lines is None:
+            return True
+        return line_start < pred.stop and line_start + n_lines > pred.start
+    if not manifest:
+        return True
+    if isinstance(pred, And):  # pragma: no cover - flattened upstream
+        return all(_chunk_possible(p, ctx, manifest, line_start, n_lines)
+                   for p in pred.preds)
+    if isinstance(pred, FieldEq):
+        entry = (manifest.get("fields") or {}).get(pred.field) or {}
+        vals = entry.get("v")
+        return vals is None or pred.value in vals
+    if isinstance(pred, EventIs):
+        used = manifest.get("used")
+        return used is None or pred.event in used
+    if isinstance(pred, Regex):
+        return all(_chunk_possible(Substring(l), ctx, manifest, line_start, n_lines)
+                   for l in ctx.required_literals(pred.pattern))
+    if isinstance(pred, Substring):
+        s = pred.s
+        if manifest.get("nv", 1):
+            vb = manifest.get("verbatim")
+            if vb is None or any(s in t for t in vb):
+                return True
+        used = manifest.get("used")
+        if used is None or ctx.session_templates is None:
+            return True
+        tpls = ctx.session_templates
+        pd_end = manifest.get("_pd_end")
+        for g in used:
+            if g >= len(tpls):
+                return True
+            cls = ctx.classify(s, tpls[g])
+            if cls == NEVER:
+                continue
+            if cls == MAYBE and _delim_free(s) and pd_end is not None:
+                # wildcards can only realize s through level-3 param
+                # values; the dictionary screen bounds which chunks can
+                thr = ctx.param_threshold(s)
+                if thr is None or pd_end < thr:
+                    continue
+            return True
+        if ctx.fmt is None:
+            return False
+        if any(c in _WS for c in s) or not ctx.boundary_safe:
+            return True
+        return _header_possible_static(s, manifest.get("fields") or {}, ctx)
+    return True
+
+
+# --------------------------------------------------------------- archives
+
+class _ArchiveChunks:
+    """Uniform chunk iteration over LZJF / LZJM / LZJS sources."""
+
+    def __init__(self, src):
+        self.reader = None
+        blob = None
+        if isinstance(src, (bytes, bytearray, memoryview)):
+            blob = bytes(src)
+            magic = blob[:4]
+        elif isinstance(src, (str, os.PathLike)):
+            with open(src, "rb") as f:
+                magic = f.read(4)
+            if magic != b"LZJS":
+                with open(src, "rb") as f:
+                    blob = f.read()
+        else:
+            raise ValueError(f"src must be bytes or a path, got {type(src)!r}")
+        self.kind = {b"LZJS": "lzjs", b"LZJM": "lzjm", FILE_MAGIC: "lzjf"}.get(
+            bytes(magic))
+        if self.kind is None:
+            raise ValueError(
+                f"not a logzip archive: magic {bytes(magic)!r} "
+                f"(expected {FILE_MAGIC!r}, b'LZJM' or b'LZJS')")
+        if self.kind == "lzjs":
+            from .stream import LZJSReader
+
+            self.reader = LZJSReader(io.BytesIO(blob) if blob is not None else src)
+            self.fmt_str = self.reader.footer.get("format")
+            self.session_templates = [tuple(t) for t in self.reader.templates]
+            self.session_params = (self.reader.params
+                                   if self.reader.footer.get("level") == 3 else None)
+            self.n_lines = self.reader.n_lines
+        else:
+            if self.kind == "lzjm":
+                from .parallel import iter_multi_chunks
+
+                self.blobs = list(iter_multi_chunks(blob))
+            else:
+                self.blobs = [blob]
+            self.session_templates = None
+            self.session_params = None
+            self.n_lines = None
+            self.fmt_str = None
+            if self.blobs:
+                # format comes from the first chunk's meta (uniform across
+                # an archive written by this codebase)
+                _, meta0 = open_container(self.blobs[0])
+                self.fmt_str = meta0.get("format")
+
+    def chunks(self):
+        """Yield (index, line_start, n_lines | None, manifest | None, open_fn)."""
+        if self.kind == "lzjs":
+            rd = self.reader
+            for k, e in enumerate(rd.index):
+                mf = rd.manifest(k)
+                if mf:
+                    mf = dict(mf)
+                    mf["_pd_end"] = e.get("pd_base", 0) + e.get("pd_delta", 0)
+                yield (k, e["line_start"], e["n_lines"], mf,
+                       lambda k=k: rd.chunk_reader(k))
+        else:
+            line_start = 0
+            for k, blob in enumerate(self.blobs):
+                def open_fn(blob=blob, k=k):
+                    try:
+                        objects, meta = open_container(blob)
+                        return ChunkReader(objects, meta)
+                    except ValueError:
+                        raise
+                    except Exception as e:
+                        raise ValueError(
+                            f"truncated or corrupt logzip chunk {k}: {e}") from e
+                cr = open_fn()
+                yield (k, line_start, cr.n, None, lambda cr=cr: cr)
+                line_start += cr.n
+
+    def close(self):
+        if self.reader is not None:
+            self.reader.close()
+
+
+# ------------------------------------------------------------- public API
+
+@dataclass
+class QueryStats:
+    """Work accounting for one query execution."""
+
+    chunks_total: int = 0
+    chunks_skipped: int = 0
+    chunks_opened: int = 0
+    rows_materialized: int = 0
+    hits: int = 0
+    template_classes: dict = dfield(default_factory=dict)
+
+    @property
+    def fraction_chunks_decoded(self) -> float:
+        return self.chunks_opened / max(self.chunks_total, 1)
+
+
+def _execute(src, query, stats: QueryStats, *, want_lines: bool = True):
+    preds = _flatten(query)
+    arch = _ArchiveChunks(src)
+    try:
+        fmt = LogFormat(arch.fmt_str) if arch.fmt_str else None
+        ctx = _Ctx(fmt, arch.session_templates, arch.session_params)
+        for p in preds:
+            if isinstance(p, FieldEq):
+                if fmt is None:
+                    raise ValueError("field predicate on an archive without a header format")
+                if p.field not in fmt.fields or p.field == fmt.content_field:
+                    raise ValueError(f"unknown header field {p.field!r} "
+                                     f"(format has {fmt.fields})")
+            elif isinstance(p, Regex):
+                # validate up front — inside the chunk loop a re.error
+                # would masquerade as a corrupt-archive ValueError
+                try:
+                    re.compile(p.pattern)
+                except re.error as e:
+                    raise ValueError(f"invalid regex {p.pattern!r}: {e}") from e
+        for k, line_start, n_lines, manifest, open_fn in arch.chunks():
+            stats.chunks_total += 1
+            if not all(_chunk_possible(p, ctx, manifest, line_start, n_lines)
+                       for p in preds):
+                stats.chunks_skipped += 1
+                continue
+            try:
+                cr = open_fn()
+                stats.chunks_opened += 1
+                tri_all = np.ones(cr.n, np.int8)
+                tris = []
+                for p in preds:
+                    t = _chunk_tri(p, ctx, cr, line_start, manifest)
+                    tris.append(t)
+                    np.minimum(tri_all, t, out=tri_all)
+                    if not (tri_all >= 0).any():
+                        break
+                hits = []
+                for pos in np.flatnonzero(tri_all >= 0).tolist():
+                    if tri_all[pos] == 1:
+                        if want_lines:
+                            line = cr.line(pos)
+                            stats.rows_materialized += 1
+                        else:
+                            line = None
+                    else:
+                        line = cr.line(pos)
+                        stats.rows_materialized += 1
+                        if not all(t[pos] == 1 or _test_line(p, line, line_start + pos)
+                                   for p, t in zip(preds, tris)):
+                            continue
+                    hits.append((line_start + pos, line))
+            except ValueError:
+                raise
+            except Exception as e:
+                # a corrupt chunk must surface as ValueError, never as a
+                # stray KeyError/IndexError from partial decode
+                raise ValueError(f"truncated or corrupt logzip chunk {k}: {e}") from e
+            stats.hits += len(hits)
+            yield from hits
+    finally:
+        arch.close()
+
+
+def search(src, query, *, stats: QueryStats | None = None):
+    """Compressed-domain grep: yield ``(line_no, line)`` for every line of
+    the archive satisfying ``query``, in line order.
+
+    ``src`` is an archive blob (bytes) or a path; LZJF, LZJM and LZJS
+    containers are all accepted.  ``query`` is a predicate —
+    ``Substring`` / ``Regex`` / ``FieldEq`` / ``LineRange`` / ``EventIs``
+    — or an ``And`` of them.  Pass a ``QueryStats`` to observe how much
+    of the archive was actually decoded."""
+    yield from _execute(src, query, stats if stats is not None else QueryStats())
+
+
+def count(src, query, *, stats: QueryStats | None = None) -> int:
+    """Number of matching lines — the no-materialization fast path: rows
+    proven to match by template classification are counted without ever
+    assembling their text."""
+    st = stats if stats is not None else QueryStats()
+    n = 0
+    for _ in _execute(src, query, st, want_lines=False):
+        n += 1
+    return n
+
+
+def sample(src, query, k: int = 10, *, stats: QueryStats | None = None) -> list:
+    """First ``k`` hits (line order). Chunks are evaluated lazily, so a
+    satisfied sample stops reading the archive early."""
+    st = stats if stats is not None else QueryStats()
+    out = []
+    for hit in _execute(src, query, st):
+        out.append(hit)
+        if len(out) >= k:
+            break
+    return out
+
+
+def explain(src, query) -> list[dict]:
+    """Template-classification table for the substring-like conjuncts of
+    ``query`` — one row per distinct template with its pushdown class and
+    compiled anchored regex (``templates.template_regex``)."""
+    from .templates import template_regex
+
+    preds = _flatten(query)
+    needles = [p.s for p in preds if isinstance(p, Substring)]
+    for p in preds:
+        if isinstance(p, Regex):
+            needles.extend(_required_literals(p.pattern))
+    arch = _ArchiveChunks(src)
+    try:
+        if arch.session_templates is not None:
+            tpls = list(enumerate(arch.session_templates))
+        else:
+            seen: dict[tuple, int | None] = {}
+            for _, _, _, _, open_fn in arch.chunks():
+                cr = open_fn()
+                if cr.level < 2:
+                    continue
+                used = cr.used_global
+                for k, t in enumerate(cr.templates):
+                    seen.setdefault(tuple(t), used[k] if used else None)
+            tpls = [(g, t) for t, g in seen.items()]
+        out = []
+        for g, tpl in tpls:
+            classes = [classify_template(s, tuple(tpl)) for s in needles]
+            cls = NEVER if NEVER in classes else min(classes, default=MAYBE)
+            out.append({
+                "event": g,
+                "template": " ".join("<*>" if t is None else t for t in tpl),
+                "class": _CLASS_NAMES[cls],
+                "regex": template_regex(tpl),
+            })
+        return out
+    finally:
+        arch.close()
+
+
+def extract_records(src, *, event: int | None = None,
+                    line_range: tuple[int, int] | None = None,
+                    stats: QueryStats | None = None):
+    """Structured extraction without line materialization: yield
+    ``{"line", "event", "template", "params"}`` per matched line (the
+    paper's "structured intermediate representations ... directly
+    utilized in downstream tasks"), optionally filtered by EventID /
+    global line range. Verbatim lines are not template instances and are
+    skipped."""
+    st = stats if stats is not None else QueryStats()
+    arch = _ArchiveChunks(src)
+    try:
+        for k, line_start, n_lines, manifest, open_fn in arch.chunks():
+            st.chunks_total += 1
+            skip = False
+            if line_range is not None and n_lines is not None:
+                if not (line_start < line_range[1]
+                        and line_start + n_lines > line_range[0]):
+                    skip = True
+            if not skip and event is not None and manifest:
+                used = manifest.get("used")
+                if used is not None and event not in used:
+                    skip = True
+            if skip:
+                st.chunks_skipped += 1
+                continue
+            cr = open_fn()
+            st.chunks_opened += 1
+            if cr.level < 2:
+                continue
+            used = cr.used_global
+            events = cr.events
+            recs = []
+            for kk in (np.unique(events).tolist() if len(events) else []):
+                gid = used[kk] if used is not None else kk
+                if event is not None and gid != event:
+                    continue
+                tpl = cr.templates[kk]
+                tpl_str = " ".join("<*>" if t is None else t for t in tpl)
+                n_stars = sum(1 for t in tpl if t is None)
+                cols = [cr.star_column(kk, s) for s in range(n_stars)]
+                rows_m = cr.template_rows(kk)
+                positions = cr.ok_pos[cr.matched_rows[rows_m]]
+                for r, pos in enumerate(positions.tolist()):
+                    no = line_start + pos
+                    if line_range is not None and not (line_range[0] <= no < line_range[1]):
+                        continue
+                    recs.append({
+                        "line": no,
+                        "event": gid,
+                        "template": tpl_str,
+                        "params": [u[iv[r]] for u, iv in cols],
+                    })
+            recs.sort(key=lambda rec: rec["line"])
+            st.hits += len(recs)
+            yield from recs
+    finally:
+        arch.close()

@@ -50,6 +50,70 @@ CHUNK_MAGIC = b"CHNK"
 FOOTER_MAGIC = b"LZJSIDX1"
 VERSION = 1
 
+# query-manifest caps (DESIGN.md §11): per-chunk summaries ride in the
+# footer index only while they stay small; above the caps the field is
+# recorded as unknown and the query planner conservatively decodes.
+MANIFEST_FIELD_VALS = 16     # distinct header values stored verbatim
+MANIFEST_FIELD_CHARS = 64    # else: distinct chars, if no more than this
+# Verbatim texts are largest in a session's FIRST chunk (cold template
+# store: ISE leftovers below stream_min_support go verbatim); the cap
+# must cover that or the first chunk is never skippable.
+MANIFEST_VERBATIM_BYTES = 8192  # total bytes of verbatim-line texts
+
+
+def chunk_manifest(ch) -> dict:
+    """Per-chunk query-pushdown summary written into the footer index.
+
+    ``used``: the chunk's session-global EventIDs (None when the chunk
+    has no template structure, i.e. level 1). ``nv``: count of verbatim
+    lines (header-parse failures + unmatched contents); ``verbatim``:
+    their full texts when small, else None (= unknown).  ``fields``: per
+    header field either the distinct values (``v``) or the distinct
+    character set (``c``), whichever fits the caps — enough for the
+    query planner to prove "this chunk cannot contain a hit" without
+    touching the chunk payload (DESIGN.md §11)."""
+    def utf8_ok(s: str) -> bool:
+        # the footer is utf-8 JSON; anything unencodable (surrogateescape
+        # bytes from raw inputs) is recorded as unknown instead
+        try:
+            s.encode("utf-8")
+            return True
+        except UnicodeEncodeError:
+            return False
+
+    level1 = ch.assign is None
+    n_un = 0 if level1 else int((ch.assign < 0).sum())
+    nv = len(ch.bad_idx) + n_un
+    verbatim: list[str] | None = []
+    for i in ch.bad_idx:
+        verbatim.append(ch.lines[i])
+    if not level1:
+        for i in np.flatnonzero(ch.assign < 0):
+            verbatim.append(ch.contents[int(i)])
+    if not all(utf8_ok(v) for v in verbatim) or \
+            sum(len(v.encode("utf-8", "surrogateescape")) for v in verbatim) \
+            > MANIFEST_VERBATIM_BYTES:
+        verbatim = None
+    fields: dict[str, dict] = {}
+    for f, col in ch.columns.items():
+        if ch.fmt is not None and f == ch.fmt.content_field:
+            continue
+        distinct = set(col)
+        entry: dict = {"n": len(distinct)}
+        if len(distinct) <= MANIFEST_FIELD_VALS and all(utf8_ok(v) for v in distinct):
+            entry["v"] = sorted(distinct)
+        else:
+            chars = set().union(*distinct) if distinct else set()
+            if len(chars) <= MANIFEST_FIELD_CHARS and all(utf8_ok(c) for c in chars):
+                entry["c"] = "".join(sorted(chars))
+        fields[f] = entry
+    return {
+        "used": None if level1 else ch.meta.get("stream", {}).get("used"),
+        "nv": nv,
+        "verbatim": verbatim,
+        "fields": fields,
+    }
+
 
 def _read_varint(f) -> int:
     cur = shift = 0
@@ -238,6 +302,7 @@ class StreamingCompressor:
             "pd_base": ch.pd_base,
             "pd_delta": len(ch.delta_params or []),
             "match_rate": round(ch.match_rate, 4),
+            "manifest": chunk_manifest(ch),
         })
         self._pos += len(rec)
 
@@ -382,6 +447,27 @@ class LZJSReader:
         return decompress(self.chunk_blob(k), ext_templates=self.templates,
                           ext_params=self.params)
 
+    def chunk_reader(self, k: int):
+        """Column-selective ``codec.ChunkReader`` over chunk ``k`` (the
+        compressed-domain query engine's entry point — counts as a
+        payload decode)."""
+        self.chunks_decoded += 1
+        from .codec import ChunkReader
+
+        try:
+            objects, meta = open_container(self.chunk_blob(k))
+            return ChunkReader(objects, meta, self.templates, self.params)
+        except ValueError:
+            raise
+        except Exception as e:
+            raise ValueError(f"truncated or corrupt LZJS chunk {k}: {e}") from e
+
+    def manifest(self, k: int) -> dict:
+        """Query-pushdown summary of chunk ``k`` from the footer index;
+        {} for containers written before manifests existed (the planner
+        then conservatively decodes the chunk)."""
+        return self.index[k].get("manifest") or {}
+
     def read_structured_chunk(self, k: int) -> dict:
         return read_structured(self.chunk_blob(k), ext_templates=self.templates)
 
@@ -452,7 +538,15 @@ def iter_stream(f):
     while True:
         magic = f.read(4)
         if magic != CHUNK_MAGIC:
-            return  # footer (zlib can't start with b"CHNK") or clean EOF
+            # footer reached (zlib can't start with b"CHNK"): drain it and
+            # demand the trailing magic — a stream cut at a record
+            # boundary must fail loudly, not pass for a shorter session
+            tail = magic + f.read()
+            if len(tail) < 16 or tail[-8:] != FOOTER_MAGIC:
+                raise ValueError(
+                    "truncated LZJS stream: ends without a footer "
+                    "(was the session closed?)")
+            return
         blob = f.read(_read_varint(f))
         td = f.read(_read_varint(f))
         pd = f.read(_read_varint(f))

@@ -21,11 +21,41 @@ first assigned, forever. Existing ids never move.
 from __future__ import annotations
 
 import json
+import re
 
 import numpy as np
 
 from .ise import ISEConfig, ISEResult, iterative_structure_extraction
-from .tokenizer import STAR_ID, LogFormat, Vocab, tokenize
+from .tokenizer import DEFAULT_DELIMITERS, STAR_ID, LogFormat, Vocab, tokenize
+
+
+def template_regex(template, delimiters: str = DEFAULT_DELIMITERS) -> str:
+    """Compile a template (token strings, None = wildcard) to an anchored
+    regex over message *content* with the literal tokens escaped in place.
+
+    The pattern matches exactly the set of contents a line of this
+    template can have: literal tokens verbatim, each wildcard one-or-more
+    tokens (non-delimiter runs) with interior delimiter runs, and
+    arbitrary delimiter runs in the gaps (leading/trailing possibly
+    empty). Used by the query planner (DESIGN.md §11) and by ``grep
+    --explain`` so users can re-run a pushed-down template against raw
+    logs."""
+    d = re.escape(delimiters)
+    D, T = f"[{d}]", f"[^{d}]"
+    parts = [f"^{D}*"]
+    for j, tok in enumerate(template):
+        if j:
+            parts.append(f"{D}+")
+        if tok is None:
+            parts.append(f"{T}+(?:{D}+{T}+)*")
+        else:
+            parts.append(re.escape(tok))
+    parts.append(f"{D}*$")
+    return "".join(parts)
+
+
+def compile_template_regex(template, delimiters: str = DEFAULT_DELIMITERS) -> re.Pattern:
+    return re.compile(template_regex(template, delimiters))
 
 
 class TemplateStore:

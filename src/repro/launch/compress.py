@@ -11,6 +11,12 @@
     PYTHONPATH=src python -m repro.launch.compress unpack out.lzjs back.log \
         [--range START:COUNT]
     PYTHONPATH=src python -m repro.launch.compress inspect out.lzjs
+    # compressed-domain queries (no full decompression; see DESIGN.md §11)
+    PYTHONPATH=src python -m repro.launch.compress grep out.lzjs PATTERN \
+        [--regex] [--count] [--range START:COUNT] [--template K] \
+        [--field F=V] [--json] [--limit N] [--stats] [--explain]
+    PYTHONPATH=src python -m repro.launch.compress extract out.lzjs \
+        [--template K] [--range START:COUNT] [--json]
 
 ``pack``/``stream`` accept ``-`` as the input to read stdin. Input lines
 are streamed with bounded buffering (one chunk at a time), never via a
@@ -144,6 +150,82 @@ def _cmd_unpack(args) -> None:
     print(f"wrote {len(lines)} lines to {args.outfile}{note}")
 
 
+def _parse_range(spec: str) -> tuple[int, int]:
+    start_s, sep, count_s = spec.partition(":")
+    try:
+        if not sep:
+            raise ValueError
+        start, count = int(start_s), int(count_s)
+    except ValueError:
+        sys.exit(f"--range wants START:COUNT (got {spec!r})")
+    return start, start + count
+
+
+def _build_query(args):
+    from repro.core import query as Q
+
+    preds = []
+    if getattr(args, "pattern", None) is not None:
+        preds.append(Q.Regex(args.pattern) if args.regex else Q.Substring(args.pattern))
+    if args.range:
+        preds.append(Q.LineRange(*_parse_range(args.range)))
+    if args.template is not None:
+        preds.append(Q.EventIs(args.template))
+    for fv in args.field or []:
+        f, sep, v = fv.partition("=")
+        if not sep or not f:
+            sys.exit(f"--field wants FIELD=VALUE (got {fv!r})")
+        preds.append(Q.FieldEq(f, v))
+    if not preds:
+        sys.exit("grep needs a PATTERN or at least one of --range/--template/--field")
+    return Q.And(*preds) if len(preds) > 1 else preds[0]
+
+
+def _cmd_grep(args) -> None:
+    import json as _json
+
+    from repro.core import query as Q
+
+    q = _build_query(args)
+    if args.explain:
+        for row in Q.explain(args.infile, q):
+            print(f"{row['class']:6s} [{row['event'] if row['event'] is not None else '-'}] "
+                  f"{row['template']}")
+        return
+    stats = Q.QueryStats()
+    if args.count:
+        print(Q.count(args.infile, q, stats=stats))
+    else:
+        hits = Q.search(args.infile, q, stats=stats)
+        n_out = 0
+        for no, line in hits:
+            if args.json:
+                print(_json.dumps({"line": no, "text": line}))
+            else:
+                print(f"{no}:{line}")
+            n_out += 1
+            if args.limit and n_out >= args.limit:
+                break
+    if args.stats:
+        print(f"query: {stats.hits} hits; decoded {stats.chunks_opened}/"
+              f"{stats.chunks_total} chunks (skipped {stats.chunks_skipped}), "
+              f"materialized {stats.rows_materialized} lines", file=sys.stderr)
+
+
+def _cmd_extract(args) -> None:
+    import json as _json
+
+    from repro.core.query import extract_records
+
+    rng = _parse_range(args.range) if args.range else None
+    for rec in extract_records(args.infile, event=args.template, line_range=rng):
+        if args.json:
+            print(_json.dumps(rec))
+        else:
+            params = " ".join(rec["params"])
+            print(f"{rec['line']}\t{rec['event']}\t{rec['template']}\t{params}")
+
+
 def _cmd_inspect(args) -> None:
     from repro.core.codec import read_structured
     from repro.core.parallel import MULTI_MAGIC, iter_multi_chunks
@@ -228,10 +310,33 @@ def main():
     i.add_argument("infile")
     i.add_argument("--max-chunks", type=int, default=20)
     i.add_argument("--max-templates", type=int, default=20)
+    g = sub.add_parser("grep", help="compressed-domain search (template pushdown)")
+    g.add_argument("infile")
+    g.add_argument("pattern", nargs="?", default=None,
+                   help="fixed string (default) or regex with --regex")
+    g.add_argument("--regex", action="store_true", help="treat PATTERN as a regex")
+    g.add_argument("--count", action="store_true", help="print only the hit count")
+    g.add_argument("--range", default=None, metavar="START:COUNT",
+                   help="restrict to a global line range")
+    g.add_argument("--template", type=int, default=None, metavar="K",
+                   help="restrict to EventID K")
+    g.add_argument("--field", action="append", default=None, metavar="F=V",
+                   help="header-field equality (repeatable)")
+    g.add_argument("--json", action="store_true", help="JSON-lines output")
+    g.add_argument("--limit", type=int, default=None, help="stop after N hits")
+    g.add_argument("--stats", action="store_true",
+                   help="print chunks-decoded accounting to stderr")
+    g.add_argument("--explain", action="store_true",
+                   help="print the per-template pushdown classification and exit")
+    x = sub.add_parser("extract", help="structured records (line/EventID/params)")
+    x.add_argument("infile")
+    x.add_argument("--template", type=int, default=None, metavar="K")
+    x.add_argument("--range", default=None, metavar="START:COUNT")
+    x.add_argument("--json", action="store_true", help="JSON-lines output")
     args = ap.parse_args()
 
-    {"pack": _cmd_pack, "stream": _cmd_stream,
-     "unpack": _cmd_unpack, "inspect": _cmd_inspect}[args.cmd](args)
+    {"pack": _cmd_pack, "stream": _cmd_stream, "unpack": _cmd_unpack,
+     "inspect": _cmd_inspect, "grep": _cmd_grep, "extract": _cmd_extract}[args.cmd](args)
 
 
 if __name__ == "__main__":

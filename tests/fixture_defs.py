@@ -1,0 +1,55 @@
+"""Canonical build recipe for the golden-archive conformance fixtures.
+
+One definition shared by ``scripts/make_fixtures.py`` (writes the
+committed files) and ``tests/test_conformance.py`` (asserts today's
+codec reproduces them byte-for-byte) — the recipe and the assertion can
+never drift apart. Everything here is deterministic: the corpus
+generator, ISE sampling (seeded) and the entropy kernels have no
+ambient randomness."""
+
+import io
+import os
+
+from repro.core.codec import LogzipConfig, compress
+from repro.core.ise import ISEConfig
+from repro.core.parallel import compress_parallel
+from repro.core.stream import StreamingCompressor
+from repro.data.loggen import DATASETS, generate_lines
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+DATASET = "HDFS"
+N_LINES = 400
+SEED = 42
+CHUNK_LINES = 100
+
+
+def fixture_cfg() -> LogzipConfig:
+    return LogzipConfig(level=3, kernel="gzip", format=DATASETS[DATASET]["format"],
+                        ise=ISEConfig(min_sample=100, max_iters=3, seed=0))
+
+
+def fixture_lines() -> list[str]:
+    return list(generate_lines(DATASET, N_LINES, seed=SEED))
+
+
+def build_lzjf(lines: list[str]) -> bytes:
+    return compress(lines, fixture_cfg())
+
+
+def build_lzjm(lines: list[str]) -> bytes:
+    return compress_parallel(lines, fixture_cfg(), n_workers=1,
+                             chunk_lines=CHUNK_LINES)
+
+
+def build_lzjs(lines: list[str]) -> bytes:
+    buf = io.BytesIO()
+    with StreamingCompressor(buf, fixture_cfg(), chunk_lines=CHUNK_LINES) as sc:
+        sc.feed(lines)
+    return buf.getvalue()
+
+
+BUILDERS = {"lzjf": build_lzjf, "lzjm": build_lzjm, "lzjs": build_lzjs}
+
+
+def fixture_path(ext: str) -> str:
+    return os.path.join(FIXTURE_DIR, f"hdfs_{N_LINES}.{ext}")

@@ -1,0 +1,167 @@
+"""Corrupt-archive fuzzing for the streaming reader (ISSUE 4 satellite):
+bit-flip / truncate every LZJS frame type — header, template/param DELTA
+frames, kernel blob, footer index, trailer — and assert ``read_range`` /
+``iter_stream`` / ``search`` raise ``ValueError``: they must never return
+wrong lines, hang, or die on a stray assert/KeyError."""
+
+import io
+import zlib
+
+import pytest
+
+from repro.core import query as Q
+from repro.core.codec import LogzipConfig
+from repro.core.ise import ISEConfig
+from repro.core.parallel import decompress_parallel
+from repro.core.stream import LZJSReader, StreamingCompressor, iter_stream
+from repro.data.loggen import DATASETS, generate_lines
+
+NEEDLE = "block"
+
+
+@pytest.fixture(scope="module")
+def clean():
+    lines = list(generate_lines("Spark", 240, seed=3))
+    cfg = LogzipConfig(level=3, format=DATASETS["Spark"]["format"],
+                       ise=ISEConfig(min_sample=60, max_iters=2))
+    buf = io.BytesIO()
+    with StreamingCompressor(buf, cfg, chunk_lines=60) as sc:
+        sc.feed(lines)
+    blob = buf.getvalue()
+    rd = LZJSReader(io.BytesIO(blob))
+    info = {
+        "blob": blob,
+        "lines": lines,
+        "hits": [(i, l) for i, l in enumerate(lines) if NEEDLE in l],
+        "index": [dict(e) for e in rd.index],
+        "footer_offset": rd.footer_offset,
+    }
+    rd.close()
+    return info
+
+
+def _outcomes(blob):
+    """Run every reader entry point; returns the decoded lines when ALL
+    succeed, else re-raises the (expected) ValueError."""
+    rd = LZJSReader(io.BytesIO(blob))
+    all_lines = rd.read_all()
+    assert rd.read_range(70, 50) == all_lines[70:120]
+    streamed = list(iter_stream(io.BytesIO(blob)))
+    assert streamed == all_lines
+    hits = list(Q.search(blob, Q.Substring(NEEDLE)))
+    assert hits == [(i, l) for i, l in enumerate(all_lines) if NEEDLE in l]
+    assert decompress_parallel(blob) == all_lines
+    return all_lines
+
+
+def _assert_rejected_or_intact(blob, clean):
+    """A corrupted container must raise ValueError from every entry point
+    (or, if the mutation landed on a don't-care byte, behave exactly like
+    the original — never return different lines)."""
+    try:
+        got = _outcomes(blob)
+    except ValueError:
+        return "rejected"
+    assert got == clean["lines"]
+    return "intact"
+
+
+def test_clean_outcomes(clean):
+    assert _outcomes(clean["blob"]) == clean["lines"]
+
+
+def test_truncation_sweep(clean):
+    """Any proper prefix must be rejected (the footer is always lost)."""
+    blob = clean["blob"]
+    cuts = set(range(1, len(blob), max(1, len(blob) // 64)))
+    cuts.update([5, 6, len(blob) - 1, len(blob) - 8, len(blob) - 16,
+                 len(blob) - 17, clean["footer_offset"],
+                 clean["index"][1]["offset"], clean["index"][1]["doffset"]])
+    for cut in sorted(cuts):
+        t = blob[:cut]
+        with pytest.raises(ValueError):
+            LZJSReader(io.BytesIO(t)).read_range(0, 10)
+        with pytest.raises(ValueError):
+            list(iter_stream(io.BytesIO(t)))
+        with pytest.raises(ValueError):
+            list(Q.search(t, Q.Substring(NEEDLE)))
+
+
+def test_bitflip_sweep(clean):
+    blob = clean["blob"]
+    rejected = 0
+    positions = set(range(0, len(blob), max(1, len(blob) // 80)))
+    for pos in sorted(positions):
+        mut = bytearray(blob)
+        mut[pos] ^= 0x10
+        if _assert_rejected_or_intact(bytes(mut), clean) == "rejected":
+            rejected += 1
+    assert rejected > len(positions) * 0.5  # most flips must be caught
+
+
+def test_bitflip_every_frame_type(clean):
+    """One targeted flip per frame: magic, version, header, chunk record
+    magic, blob-length varint, kernel blob, template delta, param delta,
+    footer index, footer length, trailer magic."""
+    blob = clean["blob"]
+    e1 = clean["index"][1]
+    targets = {
+        "container_magic": 0,
+        "version": 4,
+        "session_header": 8,
+        "chunk_magic": e1["offset"],
+        "blob_len_varint": e1["offset"] + 4,
+        "kernel_blob": e1["offset"] + 32,
+        "template_delta": e1["doffset"] + 2,
+        "param_delta": e1["offset"] + e1["length"] - 3,
+        "footer_index": clean["footer_offset"] + 3,
+        "footer_len": len(blob) - 12,
+        "trailer_magic": len(blob) - 4,
+    }
+    outcomes = {}
+    for name, pos in targets.items():
+        mut = bytearray(blob)
+        mut[pos] ^= 0x08
+        outcomes[name] = _assert_rejected_or_intact(bytes(mut), clean)
+    # structural frames must reject outright
+    for name in ("container_magic", "session_header", "chunk_magic",
+                 "kernel_blob", "template_delta", "footer_index",
+                 "trailer_magic"):
+        assert outcomes[name] == "rejected", (name, outcomes[name])
+
+
+def test_delta_chain_mismatch_rejected(clean):
+    """Rewriting the footer with a wrong tpl_base must be caught by the
+    delta-chain validation, not silently shift EventIDs."""
+    blob = clean["blob"]
+    flen = int.from_bytes(blob[-16:-8], "little")
+    import json
+
+    footer = json.loads(zlib.decompress(blob[-16 - flen:-16]).decode("utf-8"))
+    footer["chunks"][1]["tpl_base"] += 1
+    fb = zlib.compress(json.dumps(footer).encode("utf-8"))
+    mut = blob[:-16 - flen] + fb + len(fb).to_bytes(8, "little") + blob[-8:]
+    with pytest.raises(ValueError, match="delta chain"):
+        LZJSReader(io.BytesIO(mut))
+
+
+def test_search_rejects_corrupt_lzjm(clean):
+    """LZJM chunk records: truncation and payload flips surface as
+    ValueError from search as well."""
+    from repro.core.codec import compress
+    from repro.core.parallel import frame_multi
+
+    cfg = LogzipConfig(level=3, format=DATASETS["Spark"]["format"],
+                       ise=ISEConfig(min_sample=60, max_iters=2))
+    lines = clean["lines"][:120]
+    blob = frame_multi([compress(lines[:60], cfg), compress(lines[60:], cfg)])
+    with pytest.raises(ValueError):
+        list(Q.search(blob[: len(blob) - 30], Q.Substring(NEEDLE)))
+    mut = bytearray(blob)
+    mut[len(blob) // 2] ^= 0x04
+    try:
+        got = list(Q.search(bytes(mut), Q.Substring(NEEDLE)))
+    except ValueError:
+        pass
+    else:
+        assert got == [(i, l) for i, l in enumerate(lines) if NEEDLE in l]

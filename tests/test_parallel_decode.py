@@ -1,0 +1,67 @@
+"""``decompress_parallel`` coverage (ISSUE 4 satellite): multi-worker
+decode of every archive form, worker-count edge cases, and agreement with
+serial ``decompress``."""
+
+import io
+
+import pytest
+
+from repro.core.codec import LogzipConfig, compress, decompress
+from repro.core.ise import ISEConfig
+from repro.core.parallel import compress_parallel, decompress_parallel
+from repro.core.stream import StreamingCompressor
+from repro.data.loggen import DATASETS
+
+CFG = LogzipConfig(level=3, format=DATASETS["Spark"]["format"],
+                   ise=ISEConfig(min_sample=100, max_iters=2))
+
+
+@pytest.fixture(scope="module")
+def lzjm_blob(spark_lines):
+    return compress_parallel(spark_lines[:1000], CFG, n_workers=1, chunk_lines=200)
+
+
+def test_parallel_decode_agrees_with_serial(spark_lines, lzjm_blob):
+    lines = spark_lines[:1000]
+    serial = decompress_parallel(lzjm_blob, n_workers=1)
+    assert serial == lines
+    for workers in (2, 3):
+        assert decompress_parallel(lzjm_blob, n_workers=workers) == serial
+
+
+def test_more_workers_than_chunks(spark_lines):
+    lines = spark_lines[:300]
+    blob = compress_parallel(lines, CFG, n_workers=1, chunk_lines=200)  # 2 chunks
+    assert decompress_parallel(blob, n_workers=8) == lines
+
+
+def test_single_chunk_with_workers(spark_lines):
+    lines = spark_lines[:150]
+    blob = compress_parallel(lines, CFG, n_workers=1, chunk_lines=10**6)
+    assert decompress_parallel(blob, n_workers=4) == lines
+
+
+def test_workers_on_lzjf_and_lzjs(spark_lines):
+    """n_workers > 1 must be harmless for forms without parallel decode
+    (LZJF single archive, LZJS stream): same output as serial."""
+    lines = spark_lines[:400]
+    lzjf = compress(lines, CFG)
+    assert decompress_parallel(lzjf, n_workers=4) == decompress(lzjf) == lines
+    buf = io.BytesIO()
+    with StreamingCompressor(buf, CFG, chunk_lines=100) as sc:
+        sc.feed(lines)
+    assert decompress_parallel(buf.getvalue(), n_workers=4) == lines
+
+
+def test_parallel_empty_and_zero_workers():
+    blob = compress_parallel([], CFG, n_workers=2)
+    assert decompress_parallel(blob, n_workers=0) == []
+    assert decompress_parallel(blob, n_workers=2) == []
+
+
+def test_parallel_decode_chunk_boundaries(spark_lines):
+    """Chunk seams must not drop/duplicate lines for any chunk size."""
+    lines = spark_lines[:401]  # deliberately not a multiple of chunk size
+    for chunk in (1, 7, 100, 400, 401):
+        blob = compress_parallel(lines, CFG, n_workers=1, chunk_lines=chunk)
+        assert decompress_parallel(blob, n_workers=2) == lines
