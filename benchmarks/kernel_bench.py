@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core.match import match_first
 from repro.core.tokenizer import Vocab, tokenize

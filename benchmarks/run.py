@@ -50,6 +50,9 @@ def main() -> None:
           [{k: r[k] for k in ("query", "hits", "hits_agree", "wall_s",
                               "fraction_chunks_decoded", "speedup_vs_baseline")}
            for r in report["query"]["queries"]])
+    _emit("Per-dataset CR — typed column codecs (v2) vs text layout (v1)",
+          [{k: r[k] for k in ("dataset", "cr_typed", "cr_v1", "typed_gain")}
+           for r in report["datasets"]["rows"]])
     _emit("Table II — compression ratio (synthetic corpora; orderings are the target)",
           compression.table2(n))
     _emit("Fig 6 — compressed MB by logzip level (gzip kernel)",

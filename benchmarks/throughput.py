@@ -258,6 +258,42 @@ def bench_query(lines: list[str], cfg: LogzipConfig, chunk_lines: int) -> dict:
     }
 
 
+# the per-dataset CR table always runs at this size, in BOTH quick and
+# full runs: the CI gate compares fresh-vs-committed per-dataset CR at a
+# 2% tolerance, which is only meaningful like-for-like (CR grows with
+# corpus size, so a quick-vs-40k comparison would need sloppy slack)
+DATASET_CR_LINES = 8000
+
+
+def bench_datasets(n_lines: int = DATASET_CR_LINES) -> dict:
+    """Per-dataset CR: typed columns (v2, default) vs the v1 text layout
+    on every synthetic corpus (ISSUE 5). ``check_cr_gate.py`` fails CI if
+    any dataset's typed CR regresses >2% vs the committed baseline or
+    stops beating its own v1 baseline."""
+    from repro.data.loggen import DATASETS
+
+    rows = []
+    for name, spec in DATASETS.items():
+        lines = list(generate_lines(name, n_lines, seed=0))
+        raw = sum(len(l.encode("utf-8", "surrogateescape")) + 1 for l in lines) - 1
+        sizes = {}
+        for typed in (True, False):
+            cfg = LogzipConfig(level=3, kernel="gzip", format=spec["format"],
+                               ise=ISE_FAST)
+            cfg.typed_columns = typed
+            blob = compress(lines, cfg)
+            assert decompress(blob) == lines, f"{name}: round-trip FAILED"
+            sizes[typed] = len(blob)
+        rows.append({
+            "dataset": name,
+            "raw_mb": round(raw / 1e6, 3),
+            "cr_typed": round(raw / sizes[True], 3),
+            "cr_v1": round(raw / sizes[False], 3),
+            "typed_gain": round(sizes[False] / sizes[True] - 1, 4),
+        })
+    return {"n_lines": n_lines, "rows": rows}
+
+
 def bench_device_pipeline(lines: list[str], fmt: str, n_chunks: int = 20) -> dict:
     """Kernel-path streaming session: bucketed static shapes must make
     chunks 3..n reuse compiled executables (zero re-traces after the
@@ -319,6 +355,7 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
     # bucketed jit cache without dominating the benchmark wall clock
     device = bench_device_pipeline(lines[: min(n_lines, 4000)], fmt)
     query = bench_query(lines, cfg, chunk_lines=max(500, n_lines // 20))
+    datasets = bench_datasets()
     report = {
         "benchmark": "compress_throughput",
         "host": {"platform": platform.platform(), "python": platform.python_version()},
@@ -330,6 +367,7 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
         "streaming": streaming,
         "device_pipeline": device,
         "query": query,
+        "datasets": datasets,
     }
     return report
 
@@ -385,6 +423,10 @@ def main() -> None:
     cf = qy["count_fast_path"]
     print(f"query[count fast path ] {cf['hits']:5d} hits in {cf['wall_s']:.3f}s  "
           f"materialized {cf['rows_materialized']} lines")
+    ds = report["datasets"]
+    for r in ds["rows"]:
+        print(f"dataset[{r['dataset']:12s}] CR typed {r['cr_typed']:6.2f} vs "
+              f"v1 {r['cr_v1']:6.2f}  (+{r['typed_gain']:.1%})")
     print(f"wrote {out}")
 
 

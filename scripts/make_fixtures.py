@@ -7,11 +7,17 @@ them byte-for-byte and that decoding restores the committed source
 lines. Run this ONLY on a deliberate format change, and record the
 change in DESIGN.md:
 
-    PYTHONPATH=src python scripts/make_fixtures.py
+    PYTHONPATH=src python scripts/make_fixtures.py [--out DIR]
+
+``--out DIR`` writes somewhere other than ``tests/fixtures`` — CI uses
+it on a conformance failure to upload the freshly-built archives as an
+artifact, so the byte diff against the committed fixtures can be
+inspected without rerunning anything locally.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -22,15 +28,20 @@ import fixture_defs as fd  # noqa: E402
 
 
 def main() -> None:
-    os.makedirs(fd.FIXTURE_DIR, exist_ok=True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="output directory (default: tests/fixtures)")
+    args = ap.parse_args()
+    out_dir = args.out or fd.FIXTURE_DIR
+    os.makedirs(out_dir, exist_ok=True)
     lines = fd.fixture_lines()
-    log_path = fd.fixture_path("log")
+    log_path = fd.fixture_path("log", out_dir)
     with open(log_path, "w", encoding="utf-8") as f:
         f.write("\n".join(lines))
     print(f"wrote {log_path} ({len(lines)} lines)")
     for ext, build in fd.BUILDERS.items():
         blob = build(lines)
-        path = fd.fixture_path(ext)
+        path = fd.fixture_path(ext, out_dir)
         with open(path, "wb") as f:
             f.write(blob)
         print(f"wrote {path} ({len(blob)} bytes)")

@@ -28,7 +28,6 @@ import json
 import os
 import shutil
 import threading
-import time
 
 import jax
 import numpy as np

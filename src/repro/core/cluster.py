@@ -14,7 +14,6 @@ on the ~1% sample, per coarse group (groups are independent → the paper's
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import numpy as np

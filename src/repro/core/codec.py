@@ -95,6 +95,10 @@ def open_container(blob: bytes) -> tuple[dict, dict]:
         meta = json.loads(objects["meta"].decode("utf-8"))
     except Exception as e:
         raise ValueError(f"truncated or corrupt logzip archive: {e}") from e
+    if meta.get("v", 1) not in (1, 2):
+        raise ValueError(
+            f"logzip archive version {meta.get('v')} is newer than this "
+            f"reader (supports v1 text columns and v2 typed columns)")
     return objects, meta
 
 

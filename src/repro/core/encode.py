@@ -290,11 +290,28 @@ class ColumnCodec:
                        name.s<k>: slot-k column (text or varint ParaIDs)}
     Slot columns are grouped *per pattern* so that values sharing a
     skeleton land in the same object (the paper's coherence argument).
+
+    With ``typed=True`` (v2 archives, DESIGN.md §12) the column is first
+    run through ``repro.core.coltypes``: columns that classify as an
+    integer family / mini-dict / IP-hex type are stored under their typed
+    layout (``name.ct`` descriptor + payloads) instead — level-3 typed
+    values no longer enter the shared ``ParamDict``. TEXT fallbacks (and
+    every v1 archive) use the layout below unchanged; decode dispatches
+    on the presence of ``name.ct``. ``type_sink`` receives the per-column
+    type summary (feeds ``meta["coltypes"]`` and the LZJS manifests);
+    ``use_kernel`` routes the integer transforms through the Pallas
+    delta/zigzag kernel (byte-identical output).
     """
 
-    def __init__(self, name: str, paradict: ParamDict | None = None):
+    def __init__(self, name: str, paradict: ParamDict | None = None, *,
+                 typed: bool = False, type_sink: dict | None = None,
+                 use_kernel: bool = False, wide_ints_text: bool = False):
         self.name = name
         self.paradict = paradict
+        self.typed = typed
+        self.type_sink = type_sink
+        self.use_kernel = use_kernel
+        self.wide_ints_text = wide_ints_text
 
     def encode(self, values: list[str]) -> dict[str, bytes]:
         """Byte-identical to the per-value reference loop, but the
@@ -305,6 +322,19 @@ class ColumnCodec:
         ParaID assignment order are unchanged."""
         n = len(values)
         inv, uvals = factorize(values)
+        if self.typed:
+            from .coltypes import encode_typed
+
+            typed = encode_typed(self.name, values, uvals,
+                                 use_kernel=self.use_kernel,
+                                 wide_ints_text=self.wide_ints_text)
+            if typed is not None:
+                objs, summary = typed
+                if self.type_sink is not None:
+                    self.type_sink[self.name] = summary
+                return objs
+            if self.type_sink is not None:
+                self.type_sink[self.name] = {"t": "text", "n": n}
         # escape first so the \x00 slot marker can never collide with
         # value bytes; decode merges then un-escapes.
         pats, part_ids, part_table, prow = split_subfields_batch([esc(v) for v in uvals])
@@ -363,6 +393,10 @@ class ColumnCodec:
         return objs
 
     def decode(self, objs: dict[str, bytes], n: int, paravalues: list[str] | None = None) -> list[str]:
+        if f"{self.name}.ct" in objs:  # typed column (v2, DESIGN.md §12)
+            from .coltypes import decode_typed
+
+            return decode_typed(self.name, objs, n)
         uniq, inv = self.decode_distinct(objs, n, paravalues)
         return [uniq[j] for j in inv]
 
@@ -378,6 +412,11 @@ class ColumnCodec:
         repeats, and the compressed-domain query engine evaluates
         predicates on the distinct values only, broadcasting the verdict
         through ``inverse``."""
+        if f"{self.name}.ct" in objs:  # typed column (v2, DESIGN.md §12)
+            from .coltypes import decode_typed
+
+            inv, uniq = factorize(decode_typed(self.name, objs, n))
+            return uniq, inv
         pat_list = split_column(objs[f"{self.name}.pat"])
         pat_ids = decode_varints(objs[f"{self.name}.pid"])
         assert len(pat_ids) == n, (self.name, len(pat_ids), n)

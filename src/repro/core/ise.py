@@ -18,7 +18,6 @@ import numpy as np
 from .cluster import ClusterConfig, cluster_sample
 from .match import match_first
 from .timing import StageTimer
-from .tokenizer import STAR_ID
 
 
 @dataclass

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .tokenizer import PAD_ID, STAR_ID
+from .tokenizer import STAR_ID
 
 CHUNK = 4096  # lines per DP chunk (bounds the M tensor)
 DEDUP_MIN_LINES = 512  # below this the np.unique sort costs more than it saves

@@ -39,6 +39,10 @@ from dataclasses import dataclass, field as dfield
 import numpy as np
 
 from .codec import ChunkReader, FILE_MAGIC, open_container
+# the typed-column screens must apply EXACTLY the integer rules
+# classification admits — one definition, imported
+from .coltypes import INT_RE as _PARAM_INT_RE
+from .coltypes import canonical_int as _canonical_int
 from .tokenizer import DEFAULT_DELIMITERS, LogFormat
 
 try:  # Python >= 3.11
@@ -54,7 +58,7 @@ _WS = frozenset(" \t\n\r\x0b\x0c")
 _DELIM_RUN_RE = re.compile(f"[{re.escape(DEFAULT_DELIMITERS)}]+")
 
 __all__ = [
-    "Substring", "Regex", "FieldEq", "LineRange", "EventIs", "And",
+    "Substring", "Regex", "FieldEq", "LineRange", "EventIs", "ParamRange", "And",
     "QueryStats", "search", "count", "sample", "explain", "extract_records",
     "classify_template", "ALWAYS", "MAYBE", "NEVER",
 ]
@@ -101,6 +105,22 @@ class EventIs:
 
 
 @dataclass(frozen=True)
+class ParamRange:
+    """Integer range predicate over one parameter column: lines matched to
+    template ``event`` (session-global id for LZJS) whose star-``star``
+    value parses as a decimal integer in ``[lo, hi)``. Values with
+    non-digit decoration (``blk_`` prefixes, dots) never match; verbatim
+    lines never match. Typed numeric columns (DESIGN.md §12) answer this
+    from their manifest ``lo``/``hi`` bounds — chunks whose range cannot
+    intersect are skipped without touching the payload."""
+
+    event: int
+    star: int
+    lo: int
+    hi: int
+
+
+@dataclass(frozen=True)
 class And:
     preds: tuple
 
@@ -116,7 +136,7 @@ def _flatten(query) -> list:
         if not out:
             raise ValueError("empty conjunction")
         return out
-    if isinstance(query, (Substring, Regex, FieldEq, LineRange, EventIs)):
+    if isinstance(query, (Substring, Regex, FieldEq, LineRange, EventIs, ParamRange)):
         return [query]
     raise ValueError(f"not a query predicate: {query!r}")
 
@@ -504,6 +524,28 @@ def _tri_event_is(pred: EventIs, cr: ChunkReader) -> np.ndarray:
     return tri
 
 
+def _tri_param_range(pred: ParamRange, cr: ChunkReader) -> np.ndarray:
+    tri = np.full(cr.n, -1, np.int8)
+    if cr.level < 2 or not len(cr.events):
+        return tri
+    used = cr.used_global
+    for k in np.unique(cr.events).tolist():
+        gid = used[k] if used is not None else k
+        if gid != pred.event:
+            continue
+        tpl = cr.templates[k]
+        n_stars = sum(1 for t in tpl if t is None)
+        if pred.star >= n_stars:
+            continue  # no such column: rows stay NEVER
+        rows = cr.ok_pos[cr.matched_rows[cr.template_rows(k)]]
+        uniq, inv = cr.star_column(k, pred.star)
+        ok = np.fromiter(
+            (bool(_PARAM_INT_RE.match(u)) and pred.lo <= int(u) < pred.hi
+             for u in uniq), bool, count=len(uniq))
+        tri[rows] = np.where(ok[inv], 1, -1).astype(np.int8)
+    return tri
+
+
 def _tri_line_range(pred: LineRange, cr: ChunkReader, line_start: int) -> np.ndarray:
     nos = line_start + np.arange(cr.n)
     return np.where((nos >= pred.start) & (nos < pred.stop), 1, -1).astype(np.int8)
@@ -519,6 +561,8 @@ def _chunk_tri(pred, ctx: _Ctx, cr: ChunkReader, line_start: int,
         return _tri_field_eq(pred, ctx, cr)
     if isinstance(pred, EventIs):
         return _tri_event_is(pred, cr)
+    if isinstance(pred, ParamRange):
+        return _tri_param_range(pred, cr)
     if isinstance(pred, LineRange):
         return _tri_line_range(pred, cr, line_start)
     raise ValueError(f"unknown predicate {pred!r}")
@@ -536,6 +580,112 @@ def _test_line(pred, line: str, line_no: int) -> bool:
 
 
 # ----------------------------------------------------- chunk-level pruning
+
+_DIGIT_SET = frozenset("0123456789")
+
+
+def _int_needle_screen(e: dict, s: str):
+    """Sharp screen for a needle against one integer-family typed column:
+    True = provably realizable, False = provably not, None = undecided
+    (fall back to the character-set reasoning).
+
+    Only needles that can ONLY match as a column value's *complete*
+    rendered core are decided: ``s`` must carry the column's full prefix,
+    the remainder must be a canonically-rendered integer of the column's
+    maximum rendered width (a wider core cannot exist, so a full-width
+    digit run aligns with a whole core or not at all). Those needles are
+    bounds-tested against the column's manifest ``lo``/``hi``. Wide
+    stream-global ids stay in the TEXT layout for sessions
+    (``coltypes.WIDE_INT_TEXT``), so rare-id point queries keep the full
+    ParamDict watermark screen."""
+    pre, suf = e.get("pre", ""), e.get("suf", "")
+    # digit (or sign) chars inside the affixes break the alignment
+    # argument — a digit run could straddle the core/affix boundary
+    if any(c in _DIGIT_SET or c == "-" for c in pre + suf):
+        return None
+    if not s.startswith(pre):
+        return None
+    rest = s[len(pre):]
+    if not rest or not _PARAM_INT_RE.match(rest):
+        return None
+    w = e.get("w")
+    if w:
+        if rest.startswith("-") or len(rest) != w:
+            return None
+    else:
+        maxw = max(len(str(e["lo"])), len(str(e["hi"])))
+        if not _canonical_int(rest) or len(rest) != maxw:
+            return None
+    v = int(rest)
+    return e["lo"] <= v <= e["hi"]
+
+
+def _typed_realizable(s: str, manifest: dict) -> bool:
+    """Could a typed *star* column of this chunk realize needle ``s``?
+
+    Typed values bypass the level-3 ParamDict, so the dictionary screen
+    must also clear the chunk's ``tcol`` summaries before ruling it out.
+    Character-set reasoning only (order-free), hence conservative: True
+    whenever unsure. Header columns (``h.*`` keys) are excluded — the
+    header region is screened by the field summaries."""
+    tcol = manifest.get("tcol")
+    if tcol is None:
+        # null = typed columns present but unsummarized; key absent = v1
+        # chunk, nothing bypassed the ParamDict
+        return "tcol" in manifest
+    for key, e in tcol.items():
+        if not key.startswith("g"):
+            continue
+        if "u" in e:
+            return True
+        chars = set(e.get("pre", "")) | set(e.get("suf", ""))
+        t = e["t"]
+        if t == "dict":
+            vals = e.get("v")
+            if vals is not None:
+                if any(s in v for v in vals):
+                    return True
+                continue
+            cs = e.get("c")
+            if cs is None:
+                return True
+            chars |= set(cs)
+        elif t == "ip_hex":
+            chars |= set("0123456789ABCDEF" if e.get("upper") else
+                         "0123456789abcdef") if e.get("hex") else set("0123456789.")
+        else:  # integer family
+            sharp = _int_needle_screen(e, s)
+            if sharp is not None:
+                if sharp:
+                    return True
+                continue  # provably not a value of this column
+            chars |= _DIGIT_SET
+            if e.get("lo", 0) < 0:
+                chars.add("-")
+        if all(c in chars for c in s):
+            return True
+    return False
+
+
+def _param_range_possible(pred: "ParamRange", manifest: dict) -> bool:
+    used = manifest.get("used")
+    if used is not None and pred.event not in used:
+        return False
+    tcol = manifest.get("tcol")
+    e = (tcol or {}).get(f"g{pred.event}.s{pred.star}")
+    if not e or "u" in e:
+        return True
+    if e.get("pre") or e.get("suf"):
+        return False  # decorated values never parse as integers
+    if "lo" in e:  # integer family: manifest bounds decide for free
+        return e["lo"] < pred.hi and e["hi"] >= pred.lo
+    if e["t"] == "dict" and "v" in e:
+        return any(_PARAM_INT_RE.match(v) and pred.lo <= int(v) < pred.hi
+                   for v in e["v"])
+    if e["t"] == "ip_hex":
+        return False  # dots / hex letters never parse as integers
+    return True
+
 
 def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
                     line_start: int, n_lines: int | None) -> bool:
@@ -557,6 +707,8 @@ def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
     if isinstance(pred, EventIs):
         used = manifest.get("used")
         return used is None or pred.event in used
+    if isinstance(pred, ParamRange):
+        return _param_range_possible(pred, manifest)
     if isinstance(pred, Regex):
         return all(_chunk_possible(Substring(l), ctx, manifest, line_start, n_lines)
                    for l in ctx.required_literals(pred.pattern))
@@ -579,9 +731,12 @@ def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
                 continue
             if cls == MAYBE and _delim_free(s) and pd_end is not None:
                 # wildcards can only realize s through level-3 param
-                # values; the dictionary screen bounds which chunks can
+                # values; the dictionary screen bounds which chunks can.
+                # Typed columns (v2) bypass the ParamDict, so their
+                # manifest summaries must also fail to realize s.
                 thr = ctx.param_threshold(s)
-                if thr is None or pd_end < thr:
+                if (thr is None or pd_end < thr) and \
+                        not _typed_realizable(s, manifest):
                     continue
             return True
         if ctx.fmt is None:

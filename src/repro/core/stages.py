@@ -79,6 +79,13 @@ class LogzipConfig:
     # over-specific one-off templates (literal params baked in), which
     # bloat the delta stream and slow every later chunk's match pass.
     stream_min_support: int = 2
+    # typed parameter-column codecs (DESIGN.md §12): classify each
+    # header/star column (timestamp / monotone / numeric / mini-dict /
+    # ip-hex) and store it under the typed layout; columns that do not
+    # classify fall back to the v1 text layout. Bumps the archive meta
+    # version to 2; False reproduces the v1 bytes exactly (the committed
+    # v1 golden fixtures are built this way).
+    typed_columns: bool = True
 
 
 class StreamSession:
@@ -143,15 +150,18 @@ class Chunk:
     # -- encode/pack
     objects: dict[str, bytes] = dfield(default_factory=dict)
     meta: dict = dfield(default_factory=dict)
+    coltypes: dict = dfield(default_factory=dict)  # column -> type summary
     blob: bytes | None = None
 
 
 # ------------------------------------------------------------------ stages
 
-def parse_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer) -> None:
+def parse_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer,
+                session: StreamSession | None = None) -> None:
     """L1: header/content split, verbatim channel for parse failures,
     header-field columns."""
-    ch.meta.update({"v": 1, "level": cfg.level, "n": len(ch.lines), "format": cfg.format})
+    ch.meta.update({"v": 2 if cfg.typed_columns else 1, "level": cfg.level,
+                    "n": len(ch.lines), "format": cfg.format})
     with tm("parse"):
         ch.fmt = LogFormat(cfg.format) if cfg.format else None
         if ch.fmt is not None:
@@ -167,7 +177,10 @@ def parse_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer) -> None:
         for f in (ch.fmt.fields if ch.fmt else []):
             if f == ch.fmt.content_field:
                 continue
-            ch.objects.update(ColumnCodec(f"h.{f}").encode(ch.columns[f]))
+            ch.objects.update(ColumnCodec(
+                f"h.{f}", typed=cfg.typed_columns, type_sink=ch.coltypes,
+                use_kernel=cfg.ise.use_kernel,
+                wide_ints_text=session is not None).encode(ch.columns[f]))
 
 
 def dedup_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer) -> None:
@@ -326,7 +339,10 @@ def encode_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer,
                 tpl, line_idx, ch.inverse, ch.grid, vocab_arr)
         with tm("columns"):
             for s, col in enumerate(star_cols):
-                ch.objects.update(ColumnCodec(f"t{k}.v{s}", paradict).encode(col))
+                ch.objects.update(ColumnCodec(
+                    f"t{k}.v{s}", paradict, typed=cfg.typed_columns,
+                    type_sink=ch.coltypes, use_kernel=cfg.ise.use_kernel,
+                    wide_ints_text=ch.session).encode(col))
             ch.objects[f"t{k}.gap.pat"] = join_column(pat_list)
             ch.objects[f"t{k}.gap.pid"] = encode_varints(pat_ids)
 
@@ -337,6 +353,10 @@ def encode_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer,
             ch.meta["stream"]["pd_delta"] = len(paradict.values) - ch.pd_base
         else:
             ch.objects["paradict"] = paradict.encode()
+    if cfg.typed_columns and ch.coltypes:
+        # per-column type table (inspect / downstream stats; the full
+        # summaries additionally feed the LZJS chunk manifest)
+        ch.meta["coltypes"] = {name: info["t"] for name, info in ch.coltypes.items()}
 
 
 def pack_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer) -> bytes:
@@ -370,7 +390,7 @@ def run_stages(
         raise ValueError("session mode grows its own store; cfg.template_store must be None")
     tm = StageTimer(stage_times)
     ch = Chunk(lines=lines)
-    parse_stage(ch, cfg, tm)
+    parse_stage(ch, cfg, tm, session=session)
     if cfg.level >= 2:
         dedup_stage(ch, cfg, tm)
         structure_stage(ch, cfg, tm, session=session)

@@ -31,6 +31,7 @@ DISTINCT templates/params, not corpus length).
 
 from __future__ import annotations
 
+import dataclasses
 import io
 import json
 import os
@@ -48,7 +49,9 @@ from .timing import StageTimer
 STREAM_MAGIC = b"LZJS"
 CHUNK_MAGIC = b"CHNK"
 FOOTER_MAGIC = b"LZJSIDX1"
-VERSION = 1
+VERSION = 2          # v2: typed-column chunks + tcol manifests (DESIGN.md §12)
+V1 = 1               # still written for typed_columns=False sessions, and
+#                      every v1 container remains readable
 
 # query-manifest caps (DESIGN.md §11): per-chunk summaries ride in the
 # footer index only while they stay small; above the caps the field is
@@ -59,6 +62,11 @@ MANIFEST_FIELD_CHARS = 64    # else: distinct chars, if no more than this
 # store: ISE leftovers below stream_min_support go verbatim); the cap
 # must cover that or the first chunk is never skippable.
 MANIFEST_VERBATIM_BYTES = 8192  # total bytes of verbatim-line texts
+# typed-column summaries (DESIGN.md §12): above these caps the chunk's
+# "tcol" is recorded as unknown (null) and the query planner loses the
+# typed-column screens for that chunk (still sound, just conservative)
+MANIFEST_TCOL_MAX = 64          # summarized typed columns per chunk
+MANIFEST_TCOL_VALS = 16         # mini-dict values stored verbatim
 
 
 def chunk_manifest(ch) -> dict:
@@ -71,7 +79,18 @@ def chunk_manifest(ch) -> dict:
     header field either the distinct values (``v``) or the distinct
     character set (``c``), whichever fits the caps — enough for the
     query planner to prove "this chunk cannot contain a hit" without
-    touching the chunk payload (DESIGN.md §11)."""
+    touching the chunk payload (DESIGN.md §11).
+
+    ``tcol`` (DESIGN.md §12): per typed column a compact summary —
+    ``t`` (type name), shared ``pre``/``suf``, integer-family ``lo``/
+    ``hi`` bounds (range-predicate chunk skipping), mini-dict values
+    (``v``) or their charset (``c``), hex case. Star columns are keyed
+    by session-global EventID (``g<gid>.s<star>``), header columns stay
+    ``h.<field>``. Typed values bypass the level-3 ParamDict, so the
+    CLP-style dictionary screen consults these summaries before ruling a
+    chunk out; ``tcol: null`` means "typed columns present but not
+    summarized" and disables the screen for the chunk. Chunks written
+    with ``typed_columns=False`` carry ``tcol: {}``."""
     def utf8_ok(s: str) -> bool:
         # the footer is utf-8 JSON; anything unencodable (surrogateescape
         # bytes from raw inputs) is recorded as unknown instead
@@ -107,12 +126,54 @@ def chunk_manifest(ch) -> dict:
             if len(chars) <= MANIFEST_FIELD_CHARS and all(utf8_ok(c) for c in chars):
                 entry["c"] = "".join(sorted(chars))
         fields[f] = entry
-    return {
-        "used": None if level1 else ch.meta.get("stream", {}).get("used"),
+    used_ids = None if level1 else ch.meta.get("stream", {}).get("used")
+    typed = [(name, info) for name, info in (ch.coltypes or {}).items()
+             if info.get("t") != "text"]
+    tcol: dict | None = {}
+    if len(typed) > MANIFEST_TCOL_MAX:
+        tcol = None
+    else:
+        for name, info in typed:
+            key = name
+            if name.startswith("t") and ".v" in name and used_ids is not None:
+                k, _, s = name[1:].partition(".v")
+                key = f"g{used_ids[int(k)]}.s{s}"
+            entry: dict = {"t": info["t"]}
+            for akey in ("pre", "suf"):
+                a = info.get(akey)
+                if a:
+                    if not utf8_ok(a):
+                        entry = {"t": info["t"], "u": 1}  # affix unserializable:
+                        break                             # realizable set unknown
+                    entry[akey] = a
+            if "u" not in entry:
+                if "lo" in info:
+                    entry["lo"], entry["hi"] = int(info["lo"]), int(info["hi"])
+                    if info.get("w"):
+                        entry["w"] = int(info["w"])
+                if info["t"] == "dict":
+                    vals = info.get("vals") or []
+                    if len(vals) <= MANIFEST_TCOL_VALS and all(utf8_ok(v) for v in vals):
+                        entry["v"] = sorted(vals)
+                    else:
+                        chars = set().union(*vals) if vals else set()
+                        if len(chars) <= MANIFEST_FIELD_CHARS and \
+                                all(utf8_ok(c) for c in chars):
+                            entry["c"] = "".join(sorted(chars))
+                if info.get("hex"):
+                    entry["hex"] = True
+                    if info.get("upper"):
+                        entry["upper"] = True
+            tcol[key] = entry
+    out = {
+        "used": used_ids,
         "nv": nv,
         "verbatim": verbatim,
         "fields": fields,
     }
+    if ch.meta.get("v", 1) >= 2:
+        out["tcol"] = tcol  # absent entirely in v1 containers (byte-stable)
+    return out
 
 
 def _read_varint(f) -> int:
@@ -190,6 +251,12 @@ class StreamingCompressor:
                 # with a different format would silently fragment the store
                 cfg = LogzipConfig(level=rd.footer["level"], kernel=rd.footer["kernel"],
                                    format=rd.footer["format"])
+            # the container version is a property of the file, not the
+            # session: appended chunks keep the original column layout.
+            # Copy — mutating the caller's cfg would silently change any
+            # LATER compressions it is reused for.
+            cfg = dataclasses.replace(
+                cfg, typed_columns=rd.footer.get("v", V1) >= 2)
             seed_store = store if store is not None else TemplateStore(rd.templates)
             if seed_store.templates != rd.templates:
                 # a superset store would make appended chunks reference
@@ -226,15 +293,19 @@ class StreamingCompressor:
     def store(self) -> TemplateStore:
         return self.session.store
 
+    @property
+    def _version(self) -> int:
+        return VERSION if self.cfg.typed_columns else V1
+
     def _write_header(self) -> None:
         head = zlib.compress(json.dumps({
-            "v": VERSION, "level": self.cfg.level, "kernel": self.cfg.kernel,
+            "v": self._version, "level": self.cfg.level, "kernel": self.cfg.kernel,
             "format": self.cfg.format,
             "seed_templates": [list(t) for t in self.session.store.templates],
             "seed_params": list(self.session.paradict.values),
         }).encode("utf-8"))
         out = bytearray(STREAM_MAGIC)
-        out.append(VERSION)
+        out.append(self._version)
         write_varint(out, len(head))
         out += head
         self._f.write(bytes(out))
@@ -321,7 +392,7 @@ class StreamingCompressor:
             self._pool.shutdown(wait=True)
             self._pool = None
         footer = {
-            "v": VERSION, "n_lines": self.total_lines,
+            "v": self._version, "n_lines": self.total_lines,
             "level": self.cfg.level, "kernel": self.cfg.kernel,
             "format": self.cfg.format,
             "chunks": self.index,
@@ -372,6 +443,9 @@ class LZJSReader:
         if len(head) < 5 or head[:4] != STREAM_MAGIC:
             raise ValueError(
                 f"not an LZJS container: magic {bytes(head[:4])!r}, expected {STREAM_MAGIC!r}")
+        if head[4] not in (V1, VERSION):
+            raise ValueError(f"LZJS container version {head[4]} is newer than "
+                             f"this reader (supports {V1} and {VERSION})")
         hlen = _read_varint(f)
         try:
             self.header = json.loads(zlib.decompress(f.read(hlen)).decode("utf-8"))
@@ -528,6 +602,9 @@ def iter_stream(f):
     if len(head) < 5 or head[:4] != STREAM_MAGIC:
         raise ValueError(
             f"not an LZJS container: magic {bytes(head[:4])!r}, expected {STREAM_MAGIC!r}")
+    if head[4] not in (V1, VERSION):
+        raise ValueError(f"LZJS container version {head[4]} is newer than "
+                         f"this reader (supports {V1} and {VERSION})")
     hlen = _read_varint(f)
     try:
         header = json.loads(zlib.decompress(f.read(hlen)).decode("utf-8"))

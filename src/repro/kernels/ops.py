@@ -15,12 +15,13 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from . import ref
 from repro.core.textops import first_occurrence_unique, runs_of
 
+from .colcodec import colcodec_transform as _colcodec_transform
 from .jitcache import bucket, bucket_stats, record_call, reset_counters  # noqa: F401 (re-exported)
 from .match_extract import match_extract as _match_extract
 from .simcount import simcount as _simcount
@@ -242,6 +243,46 @@ def match_extract(ids: np.ndarray, lens: np.ndarray, templates: list[np.ndarray]
     return assign, spans
 
 
+# ------------------------------------------ typed column codecs (device)
+
+def delta_zigzag(vals: np.ndarray, lens: np.ndarray, mode: np.ndarray,
+                 *, use_buckets: bool = True) -> np.ndarray:
+    """Batched typed-column transform (DESIGN.md §12): (R, C) int32
+    columns + per-row length and mode (1 = delta, 2 = zigzag
+    delta-of-delta, 3 = frame-of-reference) -> (R, C) uint32 payload
+    values, exactly ``coltypes.transform_ints`` per row.
+
+    The frame-of-reference row minimum is computed here (over the valid
+    prefix) and handed to the kernel as data. Shapes are bucketed to
+    powers of two so the streaming encode path reuses one executable per
+    bucket; callers gate magnitudes with ``coltypes.KERNEL_SAFE``.
+    """
+    vals = np.asarray(vals, np.int32)
+    lens_np = np.asarray(lens, np.int32)
+    mode_np = np.asarray(mode, np.int32)
+    r, width = vals.shape
+    if r == 0:
+        return np.zeros((0, width), np.uint32)
+    pos_ok = np.arange(width)[None, :] < lens_np[:, None]
+    ref = np.where(pos_ok, vals, np.iinfo(np.int32).max).min(axis=1)
+    ref = np.where((mode_np == 3) & (lens_np > 0), ref, 0).astype(np.int32)
+    if use_buckets:
+        rb, cb = bucket(r, 8), bucket(width, 128)
+        record_call("delta_zigzag", (rb, cb))
+        out = _colcodec_transform(
+            jnp.asarray(_pad_to(vals, (rb, cb))),
+            jnp.asarray(_pad_to(lens_np, (rb,))),
+            jnp.asarray(_pad_to(mode_np, (rb,))),
+            jnp.asarray(_pad_to(ref, (rb,))),
+            interpret=INTERPRET,
+        )[:r, :width]
+    else:
+        out = _colcodec_transform(
+            jnp.asarray(vals), jnp.asarray(lens_np), jnp.asarray(mode_np),
+            jnp.asarray(ref), interpret=INTERPRET)
+    return np.asarray(out)
+
+
 # --------------------------------------------- byte tokenizer (device)
 
 DEFAULT_DELIMITERS = " \t,;:="
@@ -362,3 +403,4 @@ simcount_ref = ref.simcount_ref
 wildcard_match_ref = ref.wildcard_match_ref
 match_extract_ref = ref.match_extract_ref
 tokenize_hash_ref = ref.tokenize_hash_ref
+colcodec_transform_ref = ref.colcodec_transform_ref

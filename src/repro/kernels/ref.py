@@ -87,6 +87,29 @@ def tokenize_hash_ref(blocks, lens, pw1, pw2, delims: tuple):
     return tok.astype(jnp.int8), starts.astype(jnp.int8), prefs[0], prefs[1]
 
 
+def colcodec_transform_ref(vals, lens, mode, ref):
+    """Oracle for ``kernels.colcodec.colcodec_transform``: per-row typed
+    column transform — frame-of-reference (mode 3: ``v - ref``), delta
+    (mode 1: ``t[0]=0, t[i]=v[i]-v[i-1]``) or zigzagged delta-of-delta
+    (mode 2), masked to 0 at positions >= the row's length. Matches
+    ``repro.core.coltypes.transform_ints`` row by row."""
+    vals = jnp.asarray(vals, jnp.int32)
+    r, width = vals.shape
+    pos = jnp.arange(width)[None, :]
+    in_len = pos < jnp.asarray(lens)[:, None]
+    vm = jnp.where(in_len, vals, 0)
+    prev = jnp.concatenate([jnp.zeros((r, 1), jnp.int32), vm[:, :-1]], axis=1)
+    d = jnp.where(pos > 0, vm - prev, 0)
+    dprev = jnp.concatenate([jnp.zeros((r, 1), jnp.int32), d[:, :-1]], axis=1)
+    dd = d - dprev
+    zz = (dd << 1) ^ (dd >> 31)
+    fo = vm - jnp.asarray(ref, jnp.int32)[:, None]
+    mode = jnp.asarray(mode)
+    out = jnp.where((mode == 3)[:, None], fo,
+                    jnp.where((mode == 1)[:, None], d, zz))
+    return jnp.where(in_len, out, 0).astype(jnp.uint32)
+
+
 def match_extract_ref(logs, lens, templates, t_lens, n_slots: int):
     """Oracle for ``kernels.match_extract.match_extract``: lowest-id
     matching template + per-star spans, via the *host* fused anchor

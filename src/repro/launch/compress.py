@@ -171,13 +171,23 @@ def _build_query(args):
         preds.append(Q.LineRange(*_parse_range(args.range)))
     if args.template is not None:
         preds.append(Q.EventIs(args.template))
+    if getattr(args, "param_range", None):
+        parts = args.param_range.split(":")
+        try:
+            if len(parts) != 4:
+                raise ValueError
+            ev, star, lo, hi = (int(p) for p in parts)
+        except ValueError:
+            sys.exit(f"--param-range wants EVENT:STAR:LO:HI (got {args.param_range!r})")
+        preds.append(Q.ParamRange(ev, star, lo, hi))
     for fv in args.field or []:
         f, sep, v = fv.partition("=")
         if not sep or not f:
             sys.exit(f"--field wants FIELD=VALUE (got {fv!r})")
         preds.append(Q.FieldEq(f, v))
     if not preds:
-        sys.exit("grep needs a PATTERN or at least one of --range/--template/--field")
+        sys.exit("grep needs a PATTERN or at least one of "
+                 "--range/--template/--field/--param-range")
     return Q.And(*preds) if len(preds) > 1 else preds[0]
 
 
@@ -226,8 +236,54 @@ def _cmd_extract(args) -> None:
             print(f"{rec['line']}\t{rec['event']}\t{rec['template']}\t{params}")
 
 
+def _coltype_report(objects: dict, meta: dict) -> list[str]:
+    """Per-column type/size/savings lines for one chunk (DESIGN.md §12).
+
+    Typed bytes are the column's actual objects; the reference is the
+    same values re-encoded under the v1 TEXT layout (sub-field split, no
+    shared ParamDict), so the figure isolates what the typed codec
+    bought for that column."""
+    from repro.core.codec import ChunkReader
+    from repro.core.encode import ColumnCodec
+
+    coltypes = meta.get("coltypes") or {}
+    if not coltypes:
+        return []
+    counts: dict[str, int] = {}
+    for t in coltypes.values():
+        counts[t] = counts.get(t, 0) + 1
+    summary = ", ".join(f"{n} {t}" for t, n in sorted(counts.items(),
+                                                      key=lambda kv: -kv[1]))
+    n_typed = sum(n for t, n in counts.items() if t != "text")
+    lines = [f"typed columns: {n_typed}/{len(coltypes)} ({summary})"]
+    cr = ChunkReader(objects, meta)
+    rows = []
+    for name, t in coltypes.items():
+        if t == "text":
+            continue
+        typed_b = sum(len(v) for k, v in objects.items()
+                      if k == name or k.startswith(f"{name}."))
+        if name.startswith("h."):
+            n = cr.n_ok
+        else:
+            tk = int(name[1:name.index(".")])
+            n = len(cr.events[cr.events == tk]) if len(cr.events) else 0
+        try:
+            values = ColumnCodec(name).decode(objects, n)
+            text_b = sum(len(v) for v in ColumnCodec(name).encode(values).values())
+        except Exception:
+            continue
+        rows.append((name, t, typed_b, text_b))
+    rows.sort(key=lambda r: r[3] - r[2], reverse=True)
+    for name, t, typed_b, text_b in rows:
+        gain = (1 - typed_b / text_b) if text_b else 0.0
+        lines.append(f"  {name:14s} {t:13s} {typed_b:7d} B vs text {text_b:7d} B"
+                     f"  ({gain:+.1%})")
+    return lines
+
+
 def _cmd_inspect(args) -> None:
-    from repro.core.codec import read_structured
+    from repro.core.codec import open_container, read_structured
     from repro.core.parallel import MULTI_MAGIC, iter_multi_chunks
     from repro.core.stream import STREAM_MAGIC, LZJSReader
 
@@ -245,6 +301,11 @@ def _cmd_inspect(args) -> None:
                   f"+{e.get('pd_delta', 0)} params  match {e['match_rate']:.3f}")
         if len(s["chunks"]) > args.max_chunks:
             print(f"  ... {len(s['chunks']) - args.max_chunks} more chunks")
+        # per-column type/savings breakdown of the first chunk (v2 only)
+        if len(rd):
+            objects, meta = open_container(rd.chunk_blob(0))
+            for line in _coltype_report(objects, meta):
+                print(line)
         for t in rd.templates[:args.max_templates]:
             print("  ", " ".join("<*>" if x is None else x for x in t))
         return
@@ -268,10 +329,16 @@ def _cmd_inspect(args) -> None:
             print(f"  chunk {k:3d}: {n} lines  {t} templates  match {r:.3f}")
         if len(rows) > args.max_chunks:
             print(f"  ... {len(rows) - args.max_chunks} more chunks")
+        objects, meta = open_container(next(iter_multi_chunks(blob)))
+        for line in _coltype_report(objects, meta):
+            print(line)
         return
     s = read_structured(blob)
     print(f"lines: {s['meta']['n']}  level: {s['meta']['level']}  "
           f"templates: {len(s['templates'])}  match_rate: {s['match_rate']:.3f}")
+    objects, meta = open_container(blob)
+    for line in _coltype_report(objects, meta):
+        print(line)
     for t in s["templates"][:args.max_templates]:
         print("  ", t)
 
@@ -320,6 +387,10 @@ def main():
                    help="restrict to a global line range")
     g.add_argument("--template", type=int, default=None, metavar="K",
                    help="restrict to EventID K")
+    g.add_argument("--param-range", default=None, metavar="EVENT:STAR:LO:HI",
+                   help="integer range over one parameter column; typed "
+                        "numeric columns answer from manifest bounds "
+                        "(chunks outside the range are never decoded)")
     g.add_argument("--field", action="append", default=None, metavar="F=V",
                    help="header-field equality (repeatable)")
     g.add_argument("--json", action="store_true", help="JSON-lines output")

@@ -19,13 +19,11 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.distributed.sharding import batch_pspecs, cache_pspecs, param_pspecs, to_shardings
@@ -163,7 +161,8 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, microbatches: int | None 
 
     params_s = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
     p_specs = param_pspecs(params_s, cfg, mesh, mode=mode)
-    sh = lambda spec: NamedSharding(mesh, spec)
+    def sh(spec):
+        return NamedSharding(mesh, spec)
     p_shard = to_shardings(p_specs, mesh)
 
     specs = input_specs(arch, shape, cfg)

@@ -23,7 +23,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def main():
@@ -98,7 +97,6 @@ def main():
     signal.signal(signal.SIGTERM, handle)
     signal.signal(signal.SIGINT, handle)
 
-    state = (params, opt)
     t0 = time.time()
     step = start
     for step in range(start, args.steps):

@@ -21,7 +21,8 @@ from repro.distributed.act_shard import shard_act
 def init_params(key, cfg, dtype):
     d, di, ds, dr, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
     k = jax.random.split(key, 6)
-    lim = lambda fan: 1.0 / jnp.sqrt(fan)
+    def lim(fan):
+        return 1.0 / jnp.sqrt(fan)
     p = {
         "in_proj": (jax.random.normal(k[0], (d, 2 * di)) * lim(d)).astype(dtype),
         "conv_w": (jax.random.normal(k[1], (dc, di)) * lim(dc)).astype(dtype),
@@ -105,7 +106,6 @@ def mamba_decode(x, p, cfg, state):
     """One token. x: (B, 1, d); state = (conv_state (B, dc-1, di), h (B, di, ds))."""
     conv_st, h = state
     u, z = jnp.split(x @ p["in_proj"], 2, axis=-1)     # (B, 1, di)
-    dc = cfg.ssm_conv
     window = jnp.concatenate([conv_st, u], axis=1)      # (B, dc, di)
     u_conv = (window * p["conv_w"]).sum(axis=1, keepdims=True) + p["conv_b"]
     u_act = jax.nn.silu(u_conv)

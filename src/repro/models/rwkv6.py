@@ -30,7 +30,8 @@ def init_params(key, cfg, dtype):
     h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
     lora = cfg.rwkv_decay_lora
     k = jax.random.split(key, 10)
-    lim = lambda fan: 1.0 / jnp.sqrt(fan)
+    def lim(fan):
+        return 1.0 / jnp.sqrt(fan)
     return {
         "mu_r": jnp.full((d,), 0.5, dtype),
         "mu_k": jnp.full((d,), 0.5, dtype),
@@ -59,7 +60,8 @@ def _shift(x, prev=None):
 def _projections(x, xprev, p, cfg):
     b, l, d = x.shape
     h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
-    mix = lambda mu: x * mu + xprev * (1 - mu)
+    def mix(mu):
+        return x * mu + xprev * (1 - mu)
     r = shard_act((mix(p["mu_r"]) @ p["w_r"]).reshape(b, l, h, hd), ("batch", None, "model", None))
     k = shard_act((mix(p["mu_k"]) @ p["w_k"]).reshape(b, l, h, hd), ("batch", None, "model", None))
     v = shard_act((mix(p["mu_v"]) @ p["w_v"]).reshape(b, l, h, hd), ("batch", None, "model", None))
@@ -157,7 +159,8 @@ def init_state(batch, cfg, dtype):
 def init_cmix_params(key, cfg, dtype):
     d, f = cfg.d_model, cfg.d_ff
     k = jax.random.split(key, 2)
-    lim = lambda fan: 1.0 / jnp.sqrt(fan)
+    def lim(fan):
+        return 1.0 / jnp.sqrt(fan)
     return {
         "mu": jnp.full((d,), 0.5, dtype),
         "wk": (jax.random.normal(k[0], (d, f)) * lim(d)).astype(dtype),

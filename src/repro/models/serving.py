@@ -24,7 +24,7 @@ from repro.distributed.act_shard import shard_act
 
 from . import mamba, rwkv6
 from .config import ModelConfig
-from .layers import apply_rope, attention, decode_attention, ffn, rms_norm
+from .layers import attention, decode_attention, ffn, rms_norm
 from .moe import moe_ffn
 from .transformer import (
     _attn_qkv,

@@ -15,8 +15,6 @@ applied to heads; the overhead is visible and accounted in §Roofline).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +24,7 @@ from repro.distributed.act_shard import shard_act
 
 from . import mamba, rwkv6
 from .config import ModelConfig
-from .layers import apply_rope, attention, decode_attention, ffn, rms_norm
+from .layers import apply_rope, attention, ffn, rms_norm
 from .moe import moe_ffn
 
 

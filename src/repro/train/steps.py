@@ -17,7 +17,6 @@ collectives, used to demonstrate int8 cross-pod gradient compression
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +57,6 @@ def make_train_step(cfg, hyper: AdamWHyper | None = None, microbatches: int = 1,
             (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             loss = loss / microbatches
-            metrics = {}
         grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
         lr = lr_fn(opt_state["step"]) if lr_fn is not None else None
         params, opt_state = adamw_update(grads, opt_state, params, hyper, lr=lr)
@@ -102,8 +100,6 @@ def make_train_step_explicit(cfg, mesh, hyper: AdamWHyper | None = None, compres
         grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
         params, opt_state = adamw_update(grads, opt_state, params, hyper)
         return params, opt_state, err, {"loss": loss, "grad_norm": gnorm}
-
-    pspec = jax.tree.map(lambda _: P(), {"_": 0})["_"]  # replicated
 
     def step(params, opt_state, err, batch):
         batch_specs = jax.tree.map(lambda x: P(dp, *(None,) * (x.ndim - 1)), batch)

@@ -5,7 +5,8 @@ dependencies must not be installed ad hoc, so ``conftest.py`` registers
 this module as ``hypothesis`` / ``hypothesis.strategies`` when the real
 package is missing. It implements exactly the surface the test-suite
 uses (``given``, ``settings``, ``integers``, ``lists``, ``text``,
-``characters``, ``one_of``, ``just``, ``.map``, ``.filter``) as a
+``characters``, ``one_of``, ``just``, ``sampled_from``, ``.map``,
+``.filter``) as a
 deterministic seeded random sampler: no shrinking, no database, but the
 same property checks run over a few hundred examples. With the real
 hypothesis installed this module is never imported.
@@ -50,6 +51,11 @@ def integers(min_value: int, max_value: int) -> Strategy:
 
 def just(value) -> Strategy:
     return Strategy(lambda rng: value)
+
+
+def sampled_from(values) -> Strategy:
+    vals = list(values)
+    return Strategy(lambda rng: rng.choice(vals))
 
 
 def one_of(*strategies: Strategy) -> Strategy:

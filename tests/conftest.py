@@ -2,7 +2,6 @@
 must see the real single CPU device; multi-device behaviour is tested via
 subprocesses (test_multidevice.py) so the device count is per-process."""
 
-import numpy as np
 import pytest
 
 try:  # the container image has no hypothesis wheel; use the local fallback

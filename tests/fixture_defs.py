@@ -5,7 +5,17 @@ committed files) and ``tests/test_conformance.py`` (asserts today's
 codec reproduces them byte-for-byte) — the recipe and the assertion can
 never drift apart. Everything here is deterministic: the corpus
 generator, ISE sampling (seeded) and the entropy kernels have no
-ambient randomness."""
+ambient randomness.
+
+Two fixture generations are locked side by side (DESIGN.md §12):
+
+- ``hdfs_400.{lzjf,lzjm,lzjs}`` — **v1** text-column archives
+  (``typed_columns=False``); these bytes must never change, or archives
+  in the field become unreadable;
+- ``hdfs_400.v2.{lzjf,lzjm,lzjs}`` — **v2** typed-column archives (the
+  default encoder configuration), locking the typed descriptors, the
+  LZJS ``tcol`` manifests and the version bump.
+"""
 
 import io
 import os
@@ -23,33 +33,42 @@ SEED = 42
 CHUNK_LINES = 100
 
 
-def fixture_cfg() -> LogzipConfig:
-    return LogzipConfig(level=3, kernel="gzip", format=DATASETS[DATASET]["format"],
-                        ise=ISEConfig(min_sample=100, max_iters=3, seed=0))
+def fixture_cfg(typed: bool = False) -> LogzipConfig:
+    cfg = LogzipConfig(level=3, kernel="gzip", format=DATASETS[DATASET]["format"],
+                       ise=ISEConfig(min_sample=100, max_iters=3, seed=0))
+    cfg.typed_columns = typed
+    return cfg
 
 
 def fixture_lines() -> list[str]:
     return list(generate_lines(DATASET, N_LINES, seed=SEED))
 
 
-def build_lzjf(lines: list[str]) -> bytes:
-    return compress(lines, fixture_cfg())
+def _build_lzjf(lines: list[str], typed: bool) -> bytes:
+    return compress(lines, fixture_cfg(typed))
 
 
-def build_lzjm(lines: list[str]) -> bytes:
-    return compress_parallel(lines, fixture_cfg(), n_workers=1,
+def _build_lzjm(lines: list[str], typed: bool) -> bytes:
+    return compress_parallel(lines, fixture_cfg(typed), n_workers=1,
                              chunk_lines=CHUNK_LINES)
 
 
-def build_lzjs(lines: list[str]) -> bytes:
+def _build_lzjs(lines: list[str], typed: bool) -> bytes:
     buf = io.BytesIO()
-    with StreamingCompressor(buf, fixture_cfg(), chunk_lines=CHUNK_LINES) as sc:
+    with StreamingCompressor(buf, fixture_cfg(typed), chunk_lines=CHUNK_LINES) as sc:
         sc.feed(lines)
     return buf.getvalue()
 
 
-BUILDERS = {"lzjf": build_lzjf, "lzjm": build_lzjm, "lzjs": build_lzjs}
+BUILDERS = {
+    "lzjf": lambda lines: _build_lzjf(lines, False),
+    "lzjm": lambda lines: _build_lzjm(lines, False),
+    "lzjs": lambda lines: _build_lzjs(lines, False),
+    "v2.lzjf": lambda lines: _build_lzjf(lines, True),
+    "v2.lzjm": lambda lines: _build_lzjm(lines, True),
+    "v2.lzjs": lambda lines: _build_lzjs(lines, True),
+}
 
 
-def fixture_path(ext: str) -> str:
-    return os.path.join(FIXTURE_DIR, f"hdfs_{N_LINES}.{ext}")
+def fixture_path(ext: str, base_dir: str | None = None) -> str:
+    return os.path.join(base_dir or FIXTURE_DIR, f"hdfs_{N_LINES}.{ext}")

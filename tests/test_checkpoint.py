@@ -1,10 +1,8 @@
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import CheckpointManager, latest_step, load_checkpoint, save_checkpoint
 

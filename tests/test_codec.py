@@ -1,6 +1,5 @@
 """Losslessness is THE contract: decompress(compress(x)) == x, always."""
 
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st

@@ -1,0 +1,335 @@
+"""Typed parameter-column codecs (DESIGN.md §12): type inference,
+per-type round trips over adversarial columns, kernel/host byte
+equality, archive-level v1/v2 behaviour and the typed query screens."""
+
+import io
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import coltypes as ct
+from repro.core import query as Q
+from repro.core.codec import ChunkReader, LogzipConfig, compress, decompress, open_container
+from repro.core.encode import ColumnCodec
+from repro.core.ise import ISEConfig
+from repro.core.stream import LZJSReader, StreamingCompressor
+from repro.data.loggen import DATASETS, generate_lines
+
+FMT = DATASETS["HDFS"]["format"]
+
+
+def _cfg(typed=True, level=3):
+    cfg = LogzipConfig(level=level, format=FMT,
+                       ise=ISEConfig(min_sample=100, max_iters=3, seed=0))
+    cfg.typed_columns = typed
+    return cfg
+
+
+def roundtrip(values, expect=None):
+    """encode_typed/decode_typed round trip; returns the claimed type
+    ('text' = TEXT fallback)."""
+    out = ct.encode_typed("x", values)
+    if out is None:
+        if expect is not None:
+            assert expect == "text", (values[:5], expect)
+        return "text"
+    objs, summary = out
+    assert ct.decode_typed("x", objs, len(values)) == values, summary
+    if expect is not None:
+        assert summary["t"] == expect, (summary["t"], expect, values[:5])
+    return summary["t"]
+
+
+# ----------------------------------------------------------- classification
+
+def test_monotone_ints():
+    roundtrip([str(v) for v in [5, 8, 12, 12, 40, 100]], "monotone_int")
+    roundtrip([f"{i:06d}" for i in range(100)], "monotone_int")
+
+
+def test_timestamps_non_monotone():
+    # wall clocks jitter backwards: delta-of-delta must take zigzag both ways
+    roundtrip(["203518", "203519", "203517", "203530", "203600"], "timestamp")
+    random.seed(1)
+    roundtrip(["%08d" % random.randrange(10**8) for _ in range(500)], "timestamp")
+
+
+def test_numeric_for():
+    roundtrip([str(v) for v in [17, -3, 42, 9, -88]], "numeric")
+    roundtrip([f"node-{i}" for i in [1, 22, 333, 4, 5]], "numeric")
+
+
+def test_negative_and_overflowing_ints():
+    # beyond int64: the arbitrary-precision host path must carry them
+    roundtrip([str(10**80 + i) for i in range(5)], "monotone_int")
+    roundtrip([str(v) for v in [-(2**64), 2**64, 0]], "numeric")
+    roundtrip([f"blk_{v}" for v in [-9218999999999999999,
+                                    9100000000000000000, 123]], "numeric")
+
+
+def test_low_cardinality_dict():
+    roundtrip(["INFO"] * 30 + ["WARN"] * 5, "dict")
+    roundtrip(["081109"] * 10, "dict")  # constant column
+    roundtrip(["a\nb", "a\nc"] * 10, "dict")  # escapable bytes via join_column
+
+
+def test_ip_and_hex():
+    roundtrip([f"10.9.{i % 4}.{i % 7}" for i in range(20)], "ip_hex")
+    roundtrip(["/10.251.30.85", "/10.251.31.2", "/10.250.0.9", "/10.9.4.4"],
+              "ip_hex")
+    roundtrip([f"0x{i * 2654435761 % 2**32:08x}" for i in range(20)], "ip_hex")
+    # non-canonical octets / mixed case hex must fall back
+    roundtrip(["1.2.3.4", "1.2.3.04"], "text")
+    roundtrip(["deadbeef", "DEADBEEF"], "text")
+
+
+def test_text_fallbacks():
+    roundtrip([], "text")  # empty column
+    roundtrip(["007", "07", "7"], "text")  # mixed-width leading zeros
+    roundtrip(["-0", "1", "2"], "text")  # -0 is not canonical
+    roundtrip(["0012", "0013", "014", "15"], "text")
+    # mixed-type column: ints + words, too many distinct for a dict
+    roundtrip(["a1", "b2", "c3", "d4", "e5", "x", "y", "z", "w", "v", "u",
+               "t", "s", "r", "q", "p2"], "text")
+
+
+def test_affix_stripping():
+    t = roundtrip([f"part-{i:05d}" for i in [3, 99, 1024, 7]], "timestamp")
+    assert t == "timestamp"
+    out = ct.encode_typed("x", [f"part-{i:05d}" for i in [3, 99, 1024, 7]])
+    assert out[1]["pre"] == "part-"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.one_of(
+    st.integers(-10**20, 10**20).map(str),
+    st.sampled_from(["x", "-5", "0", "00", "1e3", "3.14", "blk_9",
+                     "10.0.0.1", "ffff", "", "a b", "\x00", "é"]),
+), max_size=40))
+def test_fuzz_roundtrip_or_fallback(values):
+    """Any column either claims a type and round-trips exactly, or falls
+    back to TEXT (whose round trip the v1 codec owns)."""
+    roundtrip(values)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.text(min_size=0, max_size=12), min_size=0, max_size=32))
+def test_fuzz_arbitrary_text_columns(values):
+    roundtrip(values)
+
+
+def test_column_codec_typed_dispatch():
+    """ColumnCodec encodes typed and text columns; decode dispatches on
+    the descriptor and reproduces the rows either way."""
+    sink = {}
+    for name, col in [
+        ("a", [str(v) for v in range(50)]),
+        ("b", ["x y z", "p q", "xx"] * 5),
+        ("c", [f"10.0.0.{i % 9}" for i in range(30)]),
+    ]:
+        cc = ColumnCodec(name, typed=True, type_sink=sink)
+        objs = cc.encode(col)
+        assert ColumnCodec(name).decode(objs, len(col)) == col
+        uniq, inv = ColumnCodec(name).decode_distinct(objs, len(col))
+        assert [uniq[j] for j in inv] == col
+    assert sink["a"]["t"] == "monotone_int"
+    assert sink["b"]["t"] == "text"
+    assert sink["c"]["t"] == "ip_hex"
+
+
+# ------------------------------------------------------------------ kernel
+
+def test_kernel_matches_ref_and_host():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    R, C = 6, 45
+    vals = rng.integers(-2**27, 2**27, size=(R, C)).astype(np.int32)
+    vals[0] = np.sort(vals[0])
+    lens = np.array([C, 20, 1, 0, C, 7], np.int32)
+    mode = np.array([1, 2, 3, 3, 3, 2], np.int32)
+    out = ops.delta_zigzag(vals, lens, mode)
+    pos_ok = np.arange(C)[None, :] < lens[:, None]
+    ref_min = np.where((mode == 3) & (lens > 0),
+                       np.where(pos_ok, vals, 2**31 - 1).min(1), 0)
+    ref = np.asarray(ops.colcodec_transform_ref(vals, lens, mode, ref_min))
+    assert np.array_equal(out, ref)
+    for i in range(R):
+        n = int(lens[i])
+        if n == 0:
+            continue
+        host = ct.transform_ints([int(v) for v in vals[i, :n]], int(mode[i]))
+        assert [int(x) for x in out[i, :n]] == host, i
+
+
+def test_kernel_encode_bytes_identical():
+    rng = np.random.default_rng(1)
+    for col in (
+        [str(v) for v in rng.integers(-10**6, 10**6, 300)],
+        ["%06d" % v for v in rng.integers(0, 10**6, 300)],
+        [str(v) for v in np.sort(rng.integers(0, 10**7, 300))],
+    ):
+        a = ct.encode_typed("x", col, use_kernel=False)
+        b = ct.encode_typed("x", col, use_kernel=True)
+        assert a[0] == b[0]
+
+
+def test_kernel_bucketed_no_retrace():
+    from repro.kernels import jitcache, ops
+
+    rng = np.random.default_rng(2)
+    jitcache.reset_counters()
+    # widths all land in the 2048 bucket, which no other test touches —
+    # exactly one trace regardless of what compiled earlier
+    for n in (1100, 1105, 1090, 1210):
+        vals = rng.integers(0, 10**6, size=(1, n)).astype(np.int32)
+        ops.delta_zigzag(vals, np.array([n], np.int32), np.array([3], np.int32))
+    assert jitcache.TRACE_COUNTS["colcodec_transform"] == 1
+    assert jitcache.CALL_COUNTS["delta_zigzag"] == 4
+    assert set(jitcache.BUCKET_SHAPES) == {("delta_zigzag", 8, 2048)}
+
+
+# ----------------------------------------------------------------- archives
+
+@pytest.fixture(scope="module")
+def hdfs8k():
+    return list(generate_lines("HDFS", 8000, seed=3))
+
+
+def test_archive_roundtrip_and_smaller(hdfs8k):
+    for level in (1, 2, 3):
+        v1 = compress(hdfs8k, _cfg(False, level))
+        v2 = compress(hdfs8k, _cfg(True, level))
+        assert decompress(v1) == hdfs8k
+        assert decompress(v2) == hdfs8k
+        assert len(v2) < len(v1), f"typed columns must not lose CR at level {level}"
+
+
+def test_v2_meta_and_coltypes(hdfs8k):
+    objects, meta = open_container(compress(hdfs8k[:2000], _cfg()))
+    assert meta["v"] == 2
+    assert set(meta["coltypes"].values()) & {
+        "monotone_int", "timestamp", "numeric", "dict", "ip_hex"}
+    cr = ChunkReader(objects, meta)
+    assert cr.lines() == hdfs8k[:2000]
+    # typed header column decodes through the descriptor path
+    assert "h.Pid.ct" in objects or meta["coltypes"]["h.Pid"] == "text"
+
+
+def test_future_version_rejected(hdfs8k):
+    import json
+    import zlib
+
+    from repro.core.encode import pack_container, unpack_container
+
+    blob = compress(hdfs8k[:100], _cfg())
+    container = zlib.decompress(blob[6:])
+    objects = unpack_container(container)
+    meta = json.loads(objects["meta"])
+    meta["v"] = 3
+    objects["meta"] = json.dumps(meta).encode()
+    doctored = blob[:6] + zlib.compress(pack_container(objects), 6)
+    with pytest.raises(ValueError, match="version"):
+        decompress(doctored)
+
+
+def test_lzjs_typed_session_and_param_range(hdfs8k):
+    buf = io.BytesIO()
+    with StreamingCompressor(buf, _cfg(), chunk_lines=800) as sc:
+        sc.feed(hdfs8k)
+    blob = buf.getvalue()
+    rd = LZJSReader(io.BytesIO(blob))
+    assert rd.read_all() == hdfs8k
+    assert blob[4] == 2  # container version byte
+
+    # pick a numeric param column via structured extraction
+    import re
+    int_re = re.compile(r"-?[0-9]+\Z")
+    by_ev = {}
+    for rec in Q.extract_records(blob):
+        by_ev.setdefault(rec["event"], []).append((rec["line"], rec["params"]))
+    target = None
+    for ev, recs in sorted(by_ev.items()):
+        for si in range(len(recs[0][1])):
+            vals = [p[si] for _, p in recs]
+            if all(int_re.match(v) for v in vals) and len(set(vals)) > 3:
+                target = (ev, si, recs)
+                break
+        if target:
+            break
+    assert target is not None, "corpus should have a numeric param column"
+    ev, si, recs = target
+    ints = sorted(int(p[si]) for _, p in recs)
+    lo, hi = ints[len(ints) // 4], ints[3 * len(ints) // 4] + 1
+    got = list(Q.search(blob, Q.ParamRange(ev, si, lo, hi)))
+    want = sorted(ln for ln, p in recs if lo <= int(p[si]) < hi)
+    assert [g[0] for g in got] == want
+    assert all(line == hdfs8k[no] for no, line in got)
+
+    # a disjoint range skips every chunk from manifest bounds alone
+    st = Q.QueryStats()
+    assert list(Q.search(blob, Q.ParamRange(ev, si, max(ints) + 10**9,
+                                            max(ints) + 10**9 + 5), stats=st)) == []
+    assert st.chunks_opened == 0 and st.chunks_skipped == st.chunks_total
+
+    # missing star index never matches but also never crashes
+    assert list(Q.search(blob, Q.ParamRange(ev, 99, 0, 10**20))) == []
+
+
+def test_param_range_conjunction(hdfs8k):
+    buf = io.BytesIO()
+    with StreamingCompressor(buf, _cfg(), chunk_lines=800) as sc:
+        sc.feed(hdfs8k[:4000])
+    blob = buf.getvalue()
+    recs = list(Q.extract_records(blob))
+    ev = recs[0]["event"]
+    n_ev = sum(1 for r in recs if r["event"] == ev)
+    got = list(Q.search(blob, Q.And(Q.EventIs(ev), Q.LineRange(0, 10**9))))
+    assert len(got) == n_ev
+
+
+def test_typed_search_agrees_with_grep(hdfs8k):
+    """The tcol screens must stay conservative: hits == plain grep for
+    needles that live in typed columns, dict values, and absent ones."""
+    buf = io.BytesIO()
+    with StreamingCompressor(buf, _cfg(), chunk_lines=1000) as sc:
+        sc.feed(hdfs8k)
+    blob = buf.getvalue()
+    from collections import Counter
+
+    blk = Counter(t for l in hdfs8k for t in l.split() if t.startswith("blk_"))
+    rare = min(t for t, c in blk.items() if c == min(blk.values()))
+    needles = ["terminating", "blk_", rare, rare[4:], "no-such-needle",
+               "10.", "WARN", "081109", "203", "-1"]
+    for needle in needles:
+        st = Q.QueryStats()
+        got = list(Q.search(blob, Q.Substring(needle), stats=st))
+        want = [(i, l) for i, l in enumerate(hdfs8k) if needle in l]
+        assert got == want, needle
+    # the digest screen keeps rare-value point queries selective
+    st = Q.QueryStats()
+    list(Q.search(blob, Q.Substring(rare), stats=st))
+    assert st.chunks_skipped > 0, "typed point query should skip some chunks"
+
+
+def test_append_keeps_container_version(tmp_path, hdfs8k):
+    for typed, want in ((True, 2), (False, 1)):
+        path = str(tmp_path / f"s{int(typed)}.lzjs")
+        with StreamingCompressor(path, _cfg(typed), chunk_lines=500) as sc:
+            sc.feed(hdfs8k[:1500])
+        # append with cfg=None inherits; explicit cfg is coerced to the
+        # container's version so chunks stay uniform — via a COPY: the
+        # caller's cfg must come back untouched
+        caller_cfg = _cfg(not typed)
+        with StreamingCompressor(path, caller_cfg, chunk_lines=500,
+                                 append=True) as sc:
+            sc.feed(hdfs8k[1500:3000])
+        assert caller_cfg.typed_columns == (not typed)
+        with open(path, "rb") as f:
+            assert f.read(5)[4] == want
+        rd = LZJSReader(path)
+        assert rd.read_all() == hdfs8k[:3000]
+        rd.close()

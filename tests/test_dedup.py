@@ -79,7 +79,6 @@ def test_dedup_identity_property(lines, dup_factor):
 def test_dedup_speedup_observable():
     """On a duplicate-heavy corpus the fast path must actually skip work:
     distinct-content processing only (whitebox: tokenize cache hits)."""
-    import time
 
     base = list(generate_lines("Spark", 300, seed=1))
     lines = base * 10

@@ -21,7 +21,6 @@ from repro.core.match import (
 )
 from repro.core.tokenizer import (
     LOG_FORMATS,
-    LogFormat,
     TokenGrid,
     Vocab,
     reassemble,

@@ -3,7 +3,6 @@ ring math on hand-written HLO."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import analyze, roofline_terms

@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core.ise import ISEConfig, iterative_structure_extraction, templates_as_strings
 from repro.core.tokenizer import Vocab, tokenize

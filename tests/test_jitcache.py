@@ -6,7 +6,6 @@ session must be recompile-free after warmup."""
 import io
 
 import numpy as np
-import pytest
 
 from repro.kernels import jitcache, ops
 

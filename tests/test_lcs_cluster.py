@@ -1,12 +1,10 @@
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.cluster import ClusterConfig, cluster_sample, top_frequent_tokens
 from repro.core.lcs import common_token_count, lcs_merge
-from repro.core.match import match_one_template
-from repro.core.tokenizer import PAD_ID, STAR_ID
+from repro.core.tokenizer import STAR_ID
 
 ids_arrays = st.lists(st.integers(2, 30), min_size=1, max_size=12).map(
     lambda xs: np.array(xs, np.int32)

@@ -1,7 +1,6 @@
 """DP matcher == trie (existence semantics), span validity, kernels."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

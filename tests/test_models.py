@@ -10,7 +10,6 @@ from repro.models import (
     ModelConfig,
     decode_step,
     forward,
-    init_cache,
     init_params,
     loss_fn,
     prefill,

@@ -8,7 +8,6 @@ import json
 import re
 import zlib
 
-import numpy as np
 import pytest
 
 from repro.core import query as Q
@@ -17,7 +16,7 @@ from repro.core.ise import ISEConfig
 from repro.core.parallel import compress_parallel
 from repro.core.stream import FOOTER_MAGIC, StreamingCompressor
 from repro.core.templates import compile_template_regex, template_regex
-from repro.data.loggen import DATASETS, generate_lines
+from repro.data.loggen import DATASETS
 
 CFG_FAST = ISEConfig(min_sample=200, max_iters=2)
 FMT = DATASETS["HDFS"]["format"]

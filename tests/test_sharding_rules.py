@@ -35,7 +35,7 @@ def _axis_prod(mesh, entry):
 @pytest.mark.parametrize("mesh", [MESH_1POD, MESH_2POD], ids=["1pod", "2pod"])
 def test_param_specs_cover_and_divide(arch, mesh):
     cfg = tp_pad(get_config(arch).reduced(), 4)  # reduced tree, same structure
-    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    _ = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
     # full-size config for the divisibility check on real dims
     cfg_full = tp_pad(get_config(arch), 16)
     params_full = jax.eval_shape(lambda k: init_params(cfg_full, k), jax.random.PRNGKey(0))

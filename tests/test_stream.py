@@ -4,7 +4,6 @@ append, and corrupt/truncated-archive errors for all three magics."""
 
 import io
 
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st

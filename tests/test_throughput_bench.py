@@ -6,7 +6,7 @@ import json
 from benchmarks.throughput import bench_one, run
 from repro.core.codec import LogzipConfig
 from repro.core.ise import ISEConfig
-from repro.data.loggen import DATASETS, generate_lines
+from repro.data.loggen import DATASETS
 
 REQUIRED_STAGES = {"parse", "tokenize", "encode", "columns", "kernel", "pack"}
 

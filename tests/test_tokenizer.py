@@ -1,11 +1,8 @@
-import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.tokenizer import (
     DEFAULT_DELIMITERS,
-    LOG_FORMATS,
     PAD_ID,
     STAR_ID,
     LogFormat,
