@@ -17,6 +17,9 @@ Compares a freshly-measured throughput report against the committed
   can no longer hide one corpus regressing — and must strictly beat the
   same run's v1 text-layout CR (the typed codecs must keep earning their
   format bump on every corpus);
+- the v3 integrity layer (per-frame CRC32C + sealed commits, ISSUE 6)
+  must cost under ``--v3-overhead-cap`` (default 0.5%) of archive size
+  vs the v2 typed layout on every dataset;
 - the streaming scenario must close at least ``--gap-min`` of the
   chunking CR gap and its random-access check must have decoded only
   covering chunks;
@@ -55,6 +58,9 @@ def main() -> int:
     ap.add_argument("--dataset-slack", type=float, default=0.02,
                     help="max per-dataset typed-CR regression vs the recorded "
                          "baseline (same corpus size on both sides)")
+    ap.add_argument("--v3-overhead-cap", type=float, default=0.005,
+                    help="max archive-size overhead of the v3 integrity layer "
+                         "(frame CRCs + sealed commits) vs the v2 typed layout")
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -91,6 +97,12 @@ def main() -> int:
             checks.append(line)
             if r["cr_typed"] <= r["cr_v1"]:
                 failures.append(line)
+            if "v3_overhead" in r:
+                line = (f"CR[{name}] v3 integrity overhead {r['v3_overhead']:.2%} "
+                        f"(cap {args.v3_overhead_cap:.2%})")
+                checks.append(line)
+                if r["v3_overhead"] > args.v3_overhead_cap:
+                    failures.append(line)
             b = base_ds.get(name)
             if b is None:
                 continue  # new dataset / size change: nothing recorded yet

@@ -13,7 +13,9 @@ Compares a freshly-measured throughput report against the committed
   stages under ``--stage-floor`` of the wall are ignored (noise);
 - if the fresh report carries a ``device_pipeline`` scenario, its
   recompile counter after warmup must be zero (the bucketed jit cache
-  contract);
+  contract). Interpret-mode runs and runtime backend demotions are
+  *annotated* (never gated) so their numbers are not mistaken for
+  accelerator performance;
 - if the fresh report carries a ``query`` scenario (ISSUE 4), every
   query's hit set must agree with the decompress-then-grep baseline, and
   the *selective* queries must decode under ``--query-decode-cap`` of the
@@ -92,6 +94,15 @@ def main() -> int:
         checks.append(line)
         if dp.get("recompiles_after_warmup", 0) != 0:
             failures.append(line)
+        # benchmark honesty: annotate (never gate) interpret-mode numbers
+        # so they are not mistaken for accelerator performance
+        if dp.get("interpret_mode"):
+            print("note  device_pipeline ran in Pallas INTERPRET mode "
+                  f"(backends: {dp.get('backends', {})}) — its lines/sec "
+                  "calibrates relative cost only, not accelerator perf")
+        if dp.get("backend_fallbacks"):
+            print("note  kernel backends demoted at runtime: "
+                  f"{dp['backend_fallbacks']}")
 
     qy = fresh.get("query")
     if qy is not None:

@@ -27,6 +27,7 @@ import json
 
 import numpy as np
 
+from . import integrity
 from .encode import (
     ColumnCodec,
     ParamDict,
@@ -89,8 +90,15 @@ def open_container(blob: bytes) -> tuple[dict, dict]:
     kernel = KERNEL_BY_ID.get(kid)
     if kernel is None:
         raise ValueError(f"unknown entropy kernel id {kid} in logzip archive")
+    payload_end = len(blob)
+    if blob[5] & 0x80:
+        # v3 framing: the level byte's high bit flags a 4-byte CRC32C
+        # trailer over everything that precedes it
+        payload_end -= integrity.CRC_LEN
+        integrity.verify(blob[:payload_end], bytes(blob[payload_end:]),
+                         frame="lzjf_blob", offset=0)
     try:
-        container = KERNELS[kernel][2](blob[6:])
+        container = KERNELS[kernel][2](blob[6:payload_end])
         objects = unpack_container(container)
         meta = json.loads(objects["meta"].decode("utf-8"))
     except Exception as e:

@@ -18,17 +18,68 @@ bulk of the work and needs no cross-shard communication.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import random
+import time
 from dataclasses import replace
 
 import numpy as np
 
+from . import integrity
 from .codec import FILE_MAGIC, LogzipConfig, compress, decompress
 from .encode import write_varint
 from .stages import pack_stage, run_stages
 from .timing import StageTimer
 
 MULTI_MAGIC = b"LZJM"
+MULTI_TRAILER = b"LZJE"  # v3: optional CRC32C seal after the last member
 STREAM_MAGIC = b"LZJS"  # handled by repro.core.stream; dispatched here too
+
+# worker-pool degradation knobs (DESIGN.md §13): transient failures are
+# retried with jittered exponential backoff, then the work runs inline
+RETRY_ATTEMPTS = 3
+RETRY_BASE_DELAY = 0.05  # seconds; doubled per attempt, +/-50% jitter
+TASK_TIMEOUT = 300.0  # per-task result deadline, seconds
+
+# worker was killed / pool broke / task deadline passed / OS-level hiccup;
+# ValueError and friends are deterministic and propagate immediately
+# (BrokenProcessPool subclasses BrokenExecutor)
+_TRANSIENT = (cf.TimeoutError, TimeoutError, OSError, cf.BrokenExecutor)
+
+
+def _map_resilient(fn, items: list, n_workers: int) -> list:
+    """``ex.map`` with bounded retries: each failed-transient task is
+    retried in a fresh pool with jittered exponential backoff, and
+    whatever still fails after ``RETRY_ATTEMPTS`` rounds runs inline in
+    this process — a dead pool degrades throughput, never correctness.
+    Deterministic errors (``ValueError`` from corrupt input) raise on
+    the first attempt."""
+    results: list = [None] * len(items)
+    pending = list(range(len(items)))
+    delay = RETRY_BASE_DELAY
+    for attempt in range(RETRY_ATTEMPTS):
+        if not pending:
+            return results
+        ex = cf.ProcessPoolExecutor(max_workers=min(n_workers, len(pending)))
+        try:
+            futs = {i: ex.submit(fn, items[i]) for i in pending}
+            still = []
+            for i in pending:
+                try:
+                    results[i] = futs[i].result(timeout=TASK_TIMEOUT)
+                except _TRANSIENT:
+                    still.append(i)
+            pending = still
+        except _TRANSIENT:
+            pass  # pool itself broke mid-submit: everything retries
+        finally:
+            # wait=False: a hung worker must not wedge the retry loop
+            ex.shutdown(wait=False, cancel_futures=True)
+        if pending:
+            time.sleep(delay * (0.5 + random.random()))
+            delay *= 2
+    for i in pending:  # last resort: inline, no pool to break
+        results[i] = fn(items[i])
+    return results
 
 
 def seed_template_store(lines: list[str], cfg: LogzipConfig, max_sample: int = 8000):
@@ -79,9 +130,9 @@ def compress_parallel(
     if n_workers <= 1 or len(chunks) == 1:
         blobs = _compress_chunks_pipelined(chunks, cfg)
     else:
-        with cf.ProcessPoolExecutor(max_workers=n_workers) as ex:
-            blobs = list(ex.map(_compress_chunk, [(c, cfg) for c in chunks]))
-    return frame_multi(blobs)
+        blobs = _map_resilient(_compress_chunk, [(c, cfg) for c in chunks],
+                               n_workers)
+    return frame_multi(blobs, seal=cfg.integrity)
 
 
 def _compress_chunks_pipelined(chunks: list[list[str]], cfg: LogzipConfig) -> list[bytes]:
@@ -101,13 +152,19 @@ def _compress_chunks_pipelined(chunks: list[list[str]], cfg: LogzipConfig) -> li
         return [f.result() for f in futs]
 
 
-def frame_multi(blobs: list[bytes]) -> bytes:
-    """Frame per-chunk archive blobs into the ``LZJM`` container."""
+def frame_multi(blobs: list[bytes], seal: bool = False) -> bytes:
+    """Frame per-chunk archive blobs into the ``LZJM`` container.
+
+    With ``seal`` a ``LZJE`` + CRC32C trailer over the whole framed body
+    is appended (v3 archives); readers verify it when present and accept
+    its absence, so v1/v2 archive bytes are untouched."""
     out = bytearray(MULTI_MAGIC)
     write_varint(out, len(blobs))
     for b in blobs:
         write_varint(out, len(b))
         out += b
+    if seal:
+        out += MULTI_TRAILER + integrity.trailer(bytes(out))
     return bytes(out)
 
 
@@ -115,19 +172,22 @@ def iter_multi_chunks(blob: bytes):
     """Yield the per-chunk LZJF blobs of an ``LZJM`` container.
 
     Raises ``ValueError`` (never a bare assert) on bad magic or a
-    truncated record."""
+    truncated record — messages carry the byte offset, chunk index and
+    frame type of the failure. A trailing ``LZJE`` seal, when present,
+    is verified after the last member."""
     if len(blob) < 4 or blob[:4] != MULTI_MAGIC:
         raise ValueError(
             f"not a multi-chunk logzip archive: magic {bytes(blob[:4])!r}, "
             f"expected {MULTI_MAGIC!r}")
     pos = 4
 
-    def rd() -> int:
+    def rd(what: str) -> int:
         nonlocal pos
         cur, shift = 0, 0
         while True:
             if pos >= len(blob):
-                raise ValueError("truncated LZJM archive: varint runs past the end")
+                raise ValueError(f"truncated LZJM archive: {what} varint at "
+                                 f"byte {pos} runs past the end")
             b = blob[pos]
             pos += 1
             cur |= (b & 0x7F) << shift
@@ -135,15 +195,19 @@ def iter_multi_chunks(blob: bytes):
                 return cur
             shift += 7
 
-    n = rd()
+    n = rd("member count")
     for i in range(n):
-        ln = rd()
+        ln = rd(f"chunk {i} length")
         if pos + ln > len(blob):
             raise ValueError(
-                f"truncated LZJM archive: chunk {i} claims {ln} bytes, "
-                f"{len(blob) - pos} remain")
+                f"truncated LZJM archive: chunk {i} at byte {pos} claims "
+                f"{ln} bytes, {len(blob) - pos} remain")
         yield blob[pos : pos + ln]
         pos += ln
+    if blob[pos:pos + 4] == MULTI_TRAILER:
+        integrity.verify(
+            blob[:pos], bytes(blob[pos + 4:pos + 4 + integrity.CRC_LEN]),
+            frame="lzjm_archive", offset=pos)
 
 
 def decompress_parallel(blob: bytes, n_workers: int = 1) -> list[str]:
@@ -162,8 +226,7 @@ def decompress_parallel(blob: bytes, n_workers: int = 1) -> list[str]:
     if n_workers <= 1 or len(parts) == 1:
         decoded = [decompress(p) for p in parts]
     else:
-        with cf.ProcessPoolExecutor(max_workers=n_workers) as ex:
-            decoded = list(ex.map(decompress, parts))
+        decoded = _map_resilient(decompress, parts, n_workers)
     out: list[str] = []
     for d in decoded:
         out.extend(d)

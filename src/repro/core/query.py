@@ -750,9 +750,15 @@ def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
 # --------------------------------------------------------------- archives
 
 class _ArchiveChunks:
-    """Uniform chunk iteration over LZJF / LZJM / LZJS sources."""
+    """Uniform chunk iteration over LZJF / LZJM / LZJS sources.
 
-    def __init__(self, src):
+    ``salvage=True`` (LZJS only) opens the container through the
+    scan-rebuilt index, so queries keep working over the surviving
+    chunks of a damaged archive. Quarantined chunks are skipped in
+    either mode — same semantics as ``LZJSReader.read_range``."""
+
+    def __init__(self, src, *, salvage: bool = False):
+        self.salvage = salvage
         self.reader = None
         blob = None
         if isinstance(src, (bytes, bytearray, memoryview)):
@@ -775,7 +781,8 @@ class _ArchiveChunks:
         if self.kind == "lzjs":
             from .stream import LZJSReader
 
-            self.reader = LZJSReader(io.BytesIO(blob) if blob is not None else src)
+            self.reader = LZJSReader(io.BytesIO(blob) if blob is not None else src,
+                                     salvage=salvage)
             self.fmt_str = self.reader.footer.get("format")
             self.session_templates = [tuple(t) for t in self.reader.templates]
             self.session_params = (self.reader.params
@@ -803,6 +810,8 @@ class _ArchiveChunks:
         if self.kind == "lzjs":
             rd = self.reader
             for k, e in enumerate(rd.index):
+                if e.get("q"):
+                    continue  # quarantined: its lines are reported lost
                 mf = rd.manifest(k)
                 if mf:
                     mf = dict(mf)
@@ -848,9 +857,10 @@ class QueryStats:
         return self.chunks_opened / max(self.chunks_total, 1)
 
 
-def _execute(src, query, stats: QueryStats, *, want_lines: bool = True):
+def _execute(src, query, stats: QueryStats, *, want_lines: bool = True,
+             salvage: bool = False):
     preds = _flatten(query)
-    arch = _ArchiveChunks(src)
+    arch = _ArchiveChunks(src, salvage=salvage)
     try:
         fmt = LogFormat(arch.fmt_str) if arch.fmt_str else None
         ctx = _Ctx(fmt, arch.session_templates, arch.session_params)
@@ -901,10 +911,18 @@ def _execute(src, query, stats: QueryStats, *, want_lines: bool = True):
                             continue
                     hits.append((line_start + pos, line))
             except ValueError:
+                if arch.salvage:
+                    # damaged chunk in salvage mode: its lines are lost,
+                    # the query continues over the survivors
+                    stats.chunks_skipped += 1
+                    continue
                 raise
             except Exception as e:
                 # a corrupt chunk must surface as ValueError, never as a
                 # stray KeyError/IndexError from partial decode
+                if arch.salvage:
+                    stats.chunks_skipped += 1
+                    continue
                 raise ValueError(f"truncated or corrupt logzip chunk {k}: {e}") from e
             stats.hits += len(hits)
             yield from hits
@@ -912,7 +930,8 @@ def _execute(src, query, stats: QueryStats, *, want_lines: bool = True):
         arch.close()
 
 
-def search(src, query, *, stats: QueryStats | None = None):
+def search(src, query, *, stats: QueryStats | None = None,
+           salvage: bool = False):
     """Compressed-domain grep: yield ``(line_no, line)`` for every line of
     the archive satisfying ``query``, in line order.
 
@@ -920,17 +939,21 @@ def search(src, query, *, stats: QueryStats | None = None):
     containers are all accepted.  ``query`` is a predicate —
     ``Substring`` / ``Regex`` / ``FieldEq`` / ``LineRange`` / ``EventIs``
     — or an ``And`` of them.  Pass a ``QueryStats`` to observe how much
-    of the archive was actually decoded."""
-    yield from _execute(src, query, stats if stats is not None else QueryStats())
+    of the archive was actually decoded.  ``salvage=True`` opens a
+    damaged LZJS container through the scan-rebuilt index and queries
+    the surviving chunks."""
+    yield from _execute(src, query, stats if stats is not None else QueryStats(),
+                        salvage=salvage)
 
 
-def count(src, query, *, stats: QueryStats | None = None) -> int:
+def count(src, query, *, stats: QueryStats | None = None,
+          salvage: bool = False) -> int:
     """Number of matching lines — the no-materialization fast path: rows
     proven to match by template classification are counted without ever
     assembling their text."""
     st = stats if stats is not None else QueryStats()
     n = 0
-    for _ in _execute(src, query, st, want_lines=False):
+    for _ in _execute(src, query, st, want_lines=False, salvage=salvage):
         n += 1
     return n
 
@@ -989,7 +1012,8 @@ def explain(src, query) -> list[dict]:
 
 def extract_records(src, *, event: int | None = None,
                     line_range: tuple[int, int] | None = None,
-                    stats: QueryStats | None = None):
+                    stats: QueryStats | None = None,
+                    salvage: bool = False):
     """Structured extraction without line materialization: yield
     ``{"line", "event", "template", "params"}`` per matched line (the
     paper's "structured intermediate representations ... directly
@@ -997,7 +1021,7 @@ def extract_records(src, *, event: int | None = None,
     global line range. Verbatim lines are not template instances and are
     skipped."""
     st = stats if stats is not None else QueryStats()
-    arch = _ArchiveChunks(src)
+    arch = _ArchiveChunks(src, salvage=salvage)
     try:
         for k, line_start, n_lines, manifest, open_fn in arch.chunks():
             st.chunks_total += 1
@@ -1013,7 +1037,13 @@ def extract_records(src, *, event: int | None = None,
             if skip:
                 st.chunks_skipped += 1
                 continue
-            cr = open_fn()
+            try:
+                cr = open_fn()
+            except ValueError:
+                if arch.salvage:
+                    st.chunks_skipped += 1
+                    continue
+                raise
             st.chunks_opened += 1
             if cr.level < 2:
                 continue

@@ -30,6 +30,7 @@ from dataclasses import dataclass, field as dfield
 
 import numpy as np
 
+from . import integrity
 from .encode import (
     ColumnCodec,
     ParamDict,
@@ -86,6 +87,14 @@ class LogzipConfig:
     # version to 2; False reproduces the v1 bytes exactly (the committed
     # v1 golden fixtures are built this way).
     typed_columns: bool = True
+    # CRC32C per-frame trailers (DESIGN.md §13): every frame the writers
+    # emit — the LZJF kernel payload, LZJS header / chunk / delta /
+    # footer frames — is followed by a 4-byte checksum, and each LZJS
+    # chunk is sealed by a commit record so a torn-off footer can be
+    # rebuilt by scanning. Bumps the container version to 3; False
+    # reproduces the v1/v2 bytes exactly (the committed v1/v2 golden
+    # fixtures are built this way).
+    integrity: bool = True
 
 
 class StreamSession:
@@ -366,7 +375,13 @@ def pack_stage(ch: Chunk, cfg: LogzipConfig, tm: StageTimer) -> bytes:
     kid, comp, _ = KERNELS[cfg.kernel]
     with tm("kernel"):
         blob = comp(container)
-    ch.blob = FILE_MAGIC + bytes([kid, cfg.level]) + blob
+    if cfg.integrity:
+        # v3: bit 7 of the level byte flags a CRC32C trailer over
+        # everything before it (levels are 1-3, so the bit is free)
+        body = FILE_MAGIC + bytes([kid, cfg.level | 0x80]) + blob
+        ch.blob = body + integrity.trailer(body)
+    else:
+        ch.blob = FILE_MAGIC + bytes([kid, cfg.level]) + blob
     return ch.blob
 
 

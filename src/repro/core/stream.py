@@ -5,12 +5,21 @@ Container layout::
 
     b"LZJS" | u8 version
     varint(header_len) | zlib(json session header: level/kernel/format +
-                              seed templates/params)
-    repeat:  b"CHNK" | varint(blob_len) | LZJF chunk blob (session mode)
-             varint(td_len) | zlib(template-delta column)
-             varint(pd_len) | zlib(ParamDict-delta column)
-    zlib(json footer: per-chunk index)
+                              seed templates/params)          [crc4 in v3]
+    repeat:  b"CHNK" | varint(blob_len) | LZJF chunk blob     [crc4 in v3]
+             varint(td_len) | zlib(template-delta column)     [crc4 in v3]
+             varint(pd_len) | zlib(ParamDict-delta column)    [crc4 in v3]
+             v3 only: b"CMT1" | varints(offset, blob_len, td_len, pd_len,
+                      line_start, n_lines, tpl_base, n_delta, pd_base,
+                      pd_delta) | crc4   (sealed commit record)
+    zlib(json footer: per-chunk index)                        [crc4 in v3]
     u64le(footer_len) | b"LZJSIDX1"
+
+v3 (DESIGN.md §13) adds CRC32C trailers after every frame and seals each
+chunk with a self-locating commit record: the commit alone recovers the
+record's geometry and line range, so a torn-off footer is rebuilt by
+scanning for valid commits (``repro.core.recover``) — committed chunks
+survive any single torn write, truncation or bit flip.
 
 Chunk blobs are ordinary ``codec`` archives whose meta carries
 ``stream = {base, n_delta, used, pd_base, pd_delta}``: EventIDs are the
@@ -40,18 +49,26 @@ import zlib
 
 import numpy as np
 
+from . import integrity
 from .codec import _decompress_objects, open_container, read_structured
 from .encode import ParamDict, join_column, split_column, write_varint
+from .integrity import CRC_LEN, IntegrityError
 from .stages import LogzipConfig, StreamSession, pack_stage, run_stages
 from .templates import TemplateStore
 from .timing import StageTimer
 
 STREAM_MAGIC = b"LZJS"
 CHUNK_MAGIC = b"CHNK"
+COMMIT_MAGIC = b"CMT1"
 FOOTER_MAGIC = b"LZJSIDX1"
+V3 = 3               # v3: CRC32C frame trailers + sealed commit records
+#                      (DESIGN.md §13); column layout carried separately in
+#                      the header/footer "typed" key
 VERSION = 2          # v2: typed-column chunks + tcol manifests (DESIGN.md §12)
 V1 = 1               # still written for typed_columns=False sessions, and
 #                      every v1 container remains readable
+READ_VERSIONS = (V1, VERSION, V3)
+N_COMMIT_FIELDS = 10  # varints in a CMT1 record (see module docstring)
 
 # query-manifest caps (DESIGN.md §11): per-chunk summaries ride in the
 # footer index only while they stay small; above the caps the field is
@@ -188,6 +205,180 @@ def _read_varint(f) -> int:
         shift += 7
 
 
+def _read_varint2(f) -> tuple[int, bytes]:
+    """Like ``_read_varint`` but also returns the raw bytes consumed —
+    needed wherever the surrounding frame is CRC-checked or offsets are
+    reported in errors."""
+    raw = bytearray()
+    cur = shift = 0
+    while True:
+        b = f.read(1)
+        if not b:
+            raise ValueError("truncated LZJS stream while reading varint")
+        raw += b
+        cur |= (b[0] & 0x7F) << shift
+        if not b[0] & 0x80:
+            return cur, bytes(raw)
+        shift += 7
+
+
+def _take_varint(buf, pos: int) -> tuple[int, int]:
+    """Decode one varint from ``buf`` at ``pos`` -> (value, new_pos)."""
+    cur = shift = 0
+    while True:
+        if pos >= len(buf):
+            raise ValueError("truncated LZJS record while reading varint")
+        b = buf[pos]
+        pos += 1
+        cur |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return cur, pos
+        shift += 7
+
+
+def _varint_bytes(v: int) -> bytes:
+    out = bytearray()
+    write_varint(out, v)
+    return bytes(out)
+
+
+def frame_positions(blob_len: int, td_len: int, pd_len: int):
+    """Record-relative (start, len) of the three content frames of a v3
+    chunk record, computed purely from the frame lengths (as recorded in
+    the sealed commit) — lets salvage code slice a record without
+    trusting its possibly-damaged envelope varints. Returns
+    ``((blob), (td), (pd), commit_offset)``."""
+    p = 4 + len(_varint_bytes(blob_len))
+    blob = (p, blob_len)
+    p += blob_len + CRC_LEN + len(_varint_bytes(td_len))
+    td = (p, td_len)
+    p += td_len + CRC_LEN + len(_varint_bytes(pd_len))
+    pd = (p, pd_len)
+    p += pd_len + CRC_LEN
+    return blob, td, pd, p
+
+
+def build_commit(offset: int, blob_len: int, td_len: int, pd_len: int,
+                 line_start: int, n_lines: int, tpl_base: int, n_delta: int,
+                 pd_base: int, pd_delta: int) -> bytes:
+    """The sealed per-chunk commit record (v3): self-locating — carries
+    the record's absolute offset and frame geometry, so a scan that finds
+    a valid commit can frame and verify the whole chunk without any
+    footer."""
+    cm = bytearray(COMMIT_MAGIC)
+    for v in (offset, blob_len, td_len, pd_len, line_start, n_lines,
+              tpl_base, n_delta, pd_base, pd_delta):
+        write_varint(cm, v)
+    cm += integrity.trailer(bytes(cm))
+    return bytes(cm)
+
+
+def parse_commit(buf, pos: int) -> tuple[dict, int] | None:
+    """Parse + CRC-verify a CMT1 record at ``pos``; None if it is not a
+    valid commit (wrong magic, truncated, or checksum mismatch)."""
+    start = pos
+    if buf[pos:pos + 4] != COMMIT_MAGIC:
+        return None
+    pos += 4
+    vals = []
+    try:
+        for _ in range(N_COMMIT_FIELDS):
+            v, pos = _take_varint(buf, pos)
+            vals.append(v)
+    except ValueError:
+        return None
+    stored = bytes(buf[pos:pos + CRC_LEN])
+    if len(stored) != CRC_LEN or \
+            integrity.crc32c(buf[start:pos]) != int.from_bytes(stored, "little"):
+        return None
+    keys = ("offset", "blob_len", "td_len", "pd_len", "line_start", "n_lines",
+            "tpl_base", "n_delta", "pd_base", "pd_delta")
+    return dict(zip(keys, vals)), pos + CRC_LEN
+
+
+def parse_chunk_record(rec, k: int, offset: int, v3: bool,
+                       geometry=None) -> dict:
+    """Parse one CHNK record (``rec`` = the record bytes) into its frames.
+
+    Structural damage (bad magic, truncated frames) raises; in v3, frame
+    checksums are *reported*, not raised — ``bad`` maps frame name ->
+    IntegrityError for every frame that failed its CRC, so callers choose
+    between strict reads (raise ``bad``'s first error) and salvage/fsck
+    (quarantine and continue).
+
+    ``geometry`` = (blob_len, td_len, pd_len) from a verified commit
+    record: frames are then sliced at computed positions instead of by
+    the record's own (possibly damaged) magic/varint envelope.
+    """
+    if geometry is not None:
+        out = {"bad": {}}
+        spans = frame_positions(*geometry)
+        for (frame, key), (fpos, ln) in zip(
+                (("chunk_payload", "blob"), ("template_delta", "td"),
+                 ("paramdict_delta", "pd")), spans[:3]):
+            data = bytes(rec[fpos:fpos + ln])
+            if len(data) != ln:
+                raise ValueError(
+                    f"corrupt LZJS chunk record {k} at byte {offset}: "
+                    f"{frame} frame claims {ln} bytes, {len(data)} present")
+            out[key] = data
+            try:
+                integrity.verify(data, bytes(rec[fpos + ln:fpos + ln + CRC_LEN]),
+                                 frame=frame, offset=offset + fpos, chunk=k)
+            except IntegrityError as e:
+                out["bad"][frame] = e
+        out["commit_at"] = spans[3]
+        got = parse_commit(rec, spans[3])
+        if got is None:
+            out["commit"] = None
+            out["bad"]["commit"] = IntegrityError(
+                "invalid commit record", frame="commit",
+                offset=offset + spans[3], chunk=k)
+            out["end"] = spans[3]
+        else:
+            out["commit"], out["end"] = got
+        return out
+    if rec[:4] != CHUNK_MAGIC:
+        raise ValueError(
+            f"corrupt LZJS chunk record {k} at byte {offset}: magic "
+            f"{bytes(rec[:4])!r}, expected {CHUNK_MAGIC!r}")
+    out: dict = {"bad": {}}
+    pos = 4
+    for frame, key in (("chunk_payload", "blob"), ("template_delta", "td"),
+                       ("paramdict_delta", "pd")):
+        ln, pos = _take_varint(rec, pos)
+        data = bytes(rec[pos:pos + ln])
+        if len(data) != ln:
+            raise ValueError(
+                f"corrupt LZJS chunk record {k} at byte {offset}: "
+                f"{frame} frame claims {ln} bytes, {len(data)} present")
+        out[key] = data
+        fpos = pos
+        pos += ln
+        if v3:
+            try:
+                integrity.verify(data, bytes(rec[pos:pos + CRC_LEN]),
+                                 frame=frame, offset=offset + fpos, chunk=k)
+            except IntegrityError as e:
+                out["bad"][frame] = e
+            pos += CRC_LEN
+    if v3:
+        # a damaged commit does NOT fail the record: the footer (when it
+        # verifies) vouches for the chunk independently, and repair can
+        # rebuild the commit from it — report, don't raise
+        out["commit_at"] = pos
+        got = parse_commit(rec, pos)
+        if got is None:
+            out["commit"] = None
+            out["bad"]["commit"] = IntegrityError(
+                "missing or invalid commit record (chunk never sealed)",
+                frame="commit", offset=offset + pos, chunk=k)
+        else:
+            out["commit"], pos = got
+    out["end"] = pos
+    return out
+
+
 def _frame(values: list[str]) -> bytes:
     return zlib.compress(join_column(values), 6)
 
@@ -212,11 +403,19 @@ class StreamingCompressor:
 
     ``out`` is a path or a binary file-like (only ``write`` is needed).
     ``append=True`` reopens an existing container (path only): the
-    session state is re-seeded from the container, the footer is
-    truncated, and new chunks extend the same session — EventIDs and
-    ParaIDs stay stable across appends. With ``cfg=None`` an append
+    session state is re-seeded from the container and new chunks extend
+    the same session — EventIDs and ParaIDs stay stable across appends.
+    The old footer region is left intact until the first new chunk
+    record is actually written (DESIGN.md §13: a crash between open and
+    first flush leaves the container byte-identical), and every new v3
+    chunk carries a sealed commit record so a crash after that is
+    recoverable by ``logzip repair``. With ``cfg=None`` an append
     inherits the container's level/kernel/format (appending with a
     different format would silently fragment the store).
+
+    New path-owned sessions write to ``<path>.tmp`` and publish with
+    fsync + atomic rename on ``close()`` — a crashed session never
+    leaves a half-written file under the target name.
 
     ``pipeline=True`` (default) double-buffers chunks (DESIGN.md §10.4):
     the entropy kernel + container write of chunk k run on a single
@@ -241,6 +440,10 @@ class StreamingCompressor:
         self._buf_bytes = 0
         self._closed = False
         self._summary: dict | None = None
+        self._append = bool(append)
+        self._trunc_to: int | None = None   # deferred old-footer overwrite
+        self._footer_started = False        # a partial close left footer bytes
+        self._tmp_path: str | None = None   # fsync-then-rename target
 
         if append:
             if not isinstance(out, (str, os.PathLike)):
@@ -252,11 +455,14 @@ class StreamingCompressor:
                 cfg = LogzipConfig(level=rd.footer["level"], kernel=rd.footer["kernel"],
                                    format=rd.footer["format"])
             # the container version is a property of the file, not the
-            # session: appended chunks keep the original column layout.
-            # Copy — mutating the caller's cfg would silently change any
-            # LATER compressions it is reused for.
+            # session: appended chunks keep the original column layout
+            # and frame integrity. Copy — mutating the caller's cfg would
+            # silently change any LATER compressions it is reused for.
+            v = rd.footer.get("v", V1)
             cfg = dataclasses.replace(
-                cfg, typed_columns=rd.footer.get("v", V1) >= 2)
+                cfg,
+                typed_columns=rd.footer.get("typed", v >= 2) if v >= V3 else v >= 2,
+                integrity=v >= V3)
             seed_store = store if store is not None else TemplateStore(rd.templates)
             if seed_store.templates != rd.templates:
                 # a superset store would make appended chunks reference
@@ -268,20 +474,25 @@ class StreamingCompressor:
             self.session = StreamSession(seed_store, ParamDict(rd.params))
             self.index = [dict(e) for e in rd.index]
             self.total_lines = rd.n_lines
-            footer_offset = rd.footer_offset
+            # do NOT truncate here: the live footer stays valid until the
+            # first new chunk record is durably written over it
+            self._trunc_to = rd.footer_offset
             rd.close()
             self._own = True
             self._f = open(out, "r+b")
-            self._f.seek(footer_offset)
-            self._f.truncate()
-            self._pos = footer_offset
+            self._pos = self._trunc_to
         else:
             cfg = cfg or LogzipConfig()
             self.session = StreamSession(store)
             self.index: list[dict] = []
             self.total_lines = 0
             self._own = isinstance(out, (str, os.PathLike))
-            self._f = open(out, "wb") if self._own else out
+            if self._own:
+                self._final_path = os.fspath(out)
+                self._tmp_path = self._final_path + ".tmp"
+                self._f = open(self._tmp_path, "wb")
+            else:
+                self._f = out
 
         if cfg.template_store is not None:
             raise ValueError("pass the session store via store=, not cfg.template_store")
@@ -295,19 +506,34 @@ class StreamingCompressor:
 
     @property
     def _version(self) -> int:
+        if self.cfg.integrity:
+            return V3
         return VERSION if self.cfg.typed_columns else V1
 
+    def _fsync(self) -> None:
+        """flush + fsync when the sink supports it (no-op for BytesIO)."""
+        self._f.flush()
+        try:
+            os.fsync(self._f.fileno())
+        except (AttributeError, OSError, io.UnsupportedOperation):
+            pass
+
     def _write_header(self) -> None:
-        head = zlib.compress(json.dumps({
+        meta = {
             "v": self._version, "level": self.cfg.level, "kernel": self.cfg.kernel,
             "format": self.cfg.format,
             "seed_templates": [list(t) for t in self.session.store.templates],
             "seed_params": list(self.session.paradict.values),
-        }).encode("utf-8"))
+        }
+        if self._version >= V3:
+            meta["typed"] = self.cfg.typed_columns
+        head = zlib.compress(json.dumps(meta).encode("utf-8"))
         out = bytearray(STREAM_MAGIC)
         out.append(self._version)
         write_varint(out, len(head))
         out += head
+        if self._version >= V3:
+            out += integrity.trailer(bytes(out))
         self._f.write(bytes(out))
         self._pos = len(out)
 
@@ -357,21 +583,41 @@ class StreamingCompressor:
         pack_stage(ch, self.cfg, StageTimer(self.stage_times))
         td = _frame(ch.delta_templates or [])
         pd = _frame(ch.delta_params or [])
+        v3 = self.cfg.integrity
+        pd_delta = len(ch.delta_params or [])
         rec = bytearray(CHUNK_MAGIC)
         write_varint(rec, len(ch.blob))
         rec += ch.blob
+        if v3:
+            rec += integrity.trailer(ch.blob)
         doffset = self._pos + len(rec)
         write_varint(rec, len(td))
         rec += td
+        if v3:
+            rec += integrity.trailer(td)
         write_varint(rec, len(pd))
         rec += pd
+        if v3:
+            rec += integrity.trailer(pd)
+            rec += build_commit(self._pos, len(ch.blob), len(td), len(pd),
+                                line_start, n_chunk_lines, ch.tpl_base,
+                                ch.n_delta, ch.pd_base, pd_delta)
+        invalidating = self._trunc_to is not None
+        if invalidating:
+            # append mode, first new chunk: only now is the old footer
+            # region overwritten — and the record that does it carries a
+            # commit, so the container is recoverable from here on
+            self._f.seek(self._trunc_to)
+            self._trunc_to = None
         self._f.write(bytes(rec))
+        if invalidating:
+            self._fsync()  # the sealing commit must be durable, not cached
         self.index.append({
             "offset": self._pos, "length": len(rec), "doffset": doffset,
             "line_start": line_start, "n_lines": n_chunk_lines,
             "tpl_base": ch.tpl_base, "n_delta": ch.n_delta,
             "pd_base": ch.pd_base,
-            "pd_delta": len(ch.delta_params or []),
+            "pd_delta": pd_delta,
             "match_rate": round(ch.match_rate, 4),
             "manifest": chunk_manifest(ch),
         })
@@ -384,6 +630,10 @@ class StreamingCompressor:
 
     # -- closing -------------------------------------------------------
     def close(self) -> dict:
+        """Seal the container. Idempotent — a second call returns the
+        summary; after a *failed* first close (ENOSPC, kill) a retry
+        seeks back to the end of the chunk records and rewrites the
+        footer, so a recovered process can still seal cleanly."""
         if self._closed:
             return self._summary
         self.flush_chunk()
@@ -391,20 +641,54 @@ class StreamingCompressor:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
-        footer = {
-            "v": self._version, "n_lines": self.total_lines,
-            "level": self.cfg.level, "kernel": self.cfg.kernel,
-            "format": self.cfg.format,
-            "chunks": self.index,
-        }
-        fb = zlib.compress(json.dumps(footer).encode("utf-8"))
-        self._f.write(fb)
-        self._f.write(len(fb).to_bytes(8, "little"))
-        self._f.write(FOOTER_MAGIC)
-        self._f.flush()
-        if self._own:
+        if self._append and self._trunc_to is not None:
+            # append session that wrote nothing: the container on disk is
+            # byte-identical to what we opened — leave it untouched
             self._f.close()
-        self._closed = True
+            self._closed = True
+        else:
+            footer = {
+                "v": self._version, "n_lines": self.total_lines,
+                "level": self.cfg.level, "kernel": self.cfg.kernel,
+                "format": self.cfg.format,
+                "chunks": self.index,
+            }
+            if self._version >= V3:
+                footer["typed"] = self.cfg.typed_columns
+            fb = zlib.compress(json.dumps(footer).encode("utf-8"))
+            # chunk records (and their commits) reach disk before the
+            # footer that points into them
+            self._fsync()
+            if self._footer_started:
+                # a previous close attempt died mid-footer: rewind past
+                # its partial bytes (seekable sinks only — on a pipe this
+                # raises and the stream stays unsealed, as it must)
+                self._f.seek(self._pos)
+            self._footer_started = True
+            self._f.write(fb)
+            if self._version >= V3:
+                self._f.write(integrity.trailer(fb))
+            self._f.write(len(fb).to_bytes(8, "little"))
+            self._f.write(FOOTER_MAGIC)
+            if self._append:
+                # drop any old-footer remnants past the new end
+                self._f.truncate()
+            self._fsync()
+            if self._own:
+                self._f.close()
+                if self._tmp_path is not None:
+                    os.replace(self._tmp_path, self._final_path)
+                    self._tmp_path = None
+                    try:  # make the rename itself durable
+                        dfd = os.open(os.path.dirname(self._final_path) or ".",
+                                      os.O_RDONLY)
+                        try:
+                            os.fsync(dfd)
+                        finally:
+                            os.close(dfd)
+                    except OSError:
+                        pass
+            self._closed = True
         self._summary = {
             "n_lines": self.total_lines, "n_chunks": len(self.index),
             "n_templates": len(self.session.store.templates),
@@ -431,24 +715,64 @@ class LZJSReader:
     covering chunks are decoded").
 
     ``src`` is a path or a seekable binary file-like.
+
+    ``salvage=True`` (DESIGN.md §13): when the footer or header is
+    damaged, fall back to scanning the byte stream for sealed commit
+    records (``repro.core.recover``) and serve every chunk that still
+    verifies; chunks that fail their checks are quarantined (skipped by
+    ``read_range``/``iter_lines``, reported in ``stats()`` /
+    ``salvage_report``) instead of failing the whole archive. Chunks a
+    repair pass already quarantined (footer entries carrying ``"q"``)
+    are skipped in normal mode too.
     """
 
-    def __init__(self, src):
+    def __init__(self, src, *, salvage: bool = False):
         self._own = isinstance(src, (str, os.PathLike))
         self._f = open(src, "rb") if self._own else src
         self._lock = threading.Lock()  # shared handle; seeks must not interleave
+        self.salvage = bool(salvage)
+        self.salvage_report: dict | None = None
+        self.chunks_decoded = 0
+        try:
+            self._load_normal()
+        except ValueError:
+            if not salvage:
+                raise
+            from . import recover
+
+            res = recover.salvage_scan(self._f)
+            self.version = res["version"]
+            self.header = res["header"]
+            self.footer = res["footer"]
+            self.index = res["index"]
+            self.n_lines = res["n_lines"]
+            self.footer_offset = res["data_end"]
+            self.salvage_report = res["report"]
+            self._load_dictionaries()
+
+    def _load_normal(self) -> None:
         f = self._f
         f.seek(0)
         head = f.read(5)
         if len(head) < 5 or head[:4] != STREAM_MAGIC:
             raise ValueError(
                 f"not an LZJS container: magic {bytes(head[:4])!r}, expected {STREAM_MAGIC!r}")
-        if head[4] not in (V1, VERSION):
+        if head[4] not in READ_VERSIONS:
             raise ValueError(f"LZJS container version {head[4]} is newer than "
-                             f"this reader (supports {V1} and {VERSION})")
-        hlen = _read_varint(f)
+                             f"this reader (supports {V1}..{V3})")
+        self.version = head[4]
+        v3 = self.version >= V3
+        hlen, hraw = _read_varint2(f)
+        hblob = f.read(hlen)
+        if len(hblob) != hlen:
+            raise ValueError(
+                f"truncated LZJS container: header claims {hlen} bytes, "
+                f"{len(hblob)} present")
+        if v3:
+            integrity.verify(head + hraw + hblob, f.read(CRC_LEN),
+                             frame="header", offset=0)
         try:
-            self.header = json.loads(zlib.decompress(f.read(hlen)).decode("utf-8"))
+            self.header = json.loads(zlib.decompress(hblob).decode("utf-8"))
         except Exception as e:
             raise ValueError(f"corrupt LZJS header: {e}") from e
         f.seek(0, os.SEEK_END)
@@ -461,58 +785,132 @@ class LZJSReader:
             raise ValueError("truncated or corrupt LZJS container: footer magic missing "
                              "(was the session closed?)")
         flen = int.from_bytes(tail[:8], "little")
-        if flen + 16 > end:
+        extra = CRC_LEN if v3 else 0
+        if flen + 16 + extra > end:
             raise ValueError("corrupt LZJS container: footer length out of range")
-        self.footer_offset = end - 16 - flen
+        self.footer_offset = end - 16 - extra - flen
         f.seek(self.footer_offset)
+        fb = f.read(flen)
+        if v3:
+            integrity.verify(fb, f.read(CRC_LEN), frame="footer",
+                             offset=self.footer_offset)
         try:
-            self.footer = json.loads(zlib.decompress(f.read(flen)).decode("utf-8"))
+            self.footer = json.loads(zlib.decompress(fb).decode("utf-8"))
         except Exception as e:
-            raise ValueError(f"corrupt LZJS footer: {e}") from e
+            raise ValueError(
+                f"corrupt LZJS footer at byte {self.footer_offset}: {e}") from e
         self.index: list[dict] = self.footer["chunks"]
         self.n_lines: int = self.footer["n_lines"]
-        self.chunks_decoded = 0
         self._load_dictionaries()
+
+    def _pad_dictionaries(self, n_tpl: int, n_pd: int) -> None:
+        """Placeholder entries for a quarantined/lost chunk's deltas, so
+        session-global EventIDs/ParaIDs of LATER chunks stay aligned.
+        Chunks that actually dereference a placeholder fail decode (and
+        are themselves quarantined in salvage mode)."""
+        self.templates.extend([None] * n_tpl)
+        self.params.extend([None] * n_pd)
 
     def _load_dictionaries(self) -> None:
         """Rebuild the session template store + ParamDict from the delta
-        frames (no chunk payload decodes)."""
+        frames (no chunk payload decodes). v3 delta frames are CRC-
+        verified here — damage surfaces at open, pinned to its chunk."""
         from .codec import _deserialize_template
 
+        v3 = self.version >= V3
         self.templates: list[tuple] = [tuple(t) for t in self.header.get("seed_templates", [])]
         self.params: list[str] = list(self.header.get("seed_params", []))
         for k, e in enumerate(self.index):
-            with self._lock:
-                self._f.seek(e["doffset"])
-                data = self._f.read(e["offset"] + e["length"] - e["doffset"])
-            bf = io.BytesIO(data)
-            td = bf.read(_read_varint(bf))
-            pd_len = _read_varint(bf)
-            pd = bf.read(pd_len)
-            if e["tpl_base"] != len(self.templates) or e.get("pd_base", 0) > len(self.params):
+            if e["tpl_base"] > len(self.templates) or e.get("pd_base", 0) > len(self.params):
+                if not self.salvage:
+                    raise ValueError(
+                        f"LZJS delta chain broken at chunk {k}: base "
+                        f"{e['tpl_base']}/{e.get('pd_base')} vs accumulated "
+                        f"{len(self.templates)}/{len(self.params)}")
+                # chunks were lost between k-1 and k: pad the id space up
+                # to this chunk's recorded bases
+                self._pad_dictionaries(e["tpl_base"] - len(self.templates),
+                                       e.get("pd_base", 0) - len(self.params))
+            elif e["tpl_base"] < len(self.templates):
                 raise ValueError(
                     f"LZJS delta chain broken at chunk {k}: base "
                     f"{e['tpl_base']}/{e.get('pd_base')} vs accumulated "
                     f"{len(self.templates)}/{len(self.params)}")
-            self.templates.extend(tuple(_deserialize_template(s)) for s in _unframe(td))
-            self.params.extend(_unframe(pd))
+            # a quarantined chunk's own lines are lost, but its delta
+            # frames carry independent CRCs: apply every delta that still
+            # verifies so LATER chunks' session-global ids keep resolving,
+            # and pad only the frames that are actually damaged
+            quarantined = bool(e.get("q"))
+            try:
+                if e.get("g"):
+                    # salvage entry: slice by commit geometry, not by the
+                    # record's own (possibly damaged) envelope varints
+                    (_, _), (to, tl), (po, pl), _ = frame_positions(*e["g"])
+                    with self._lock:
+                        self._f.seek(e["offset"])
+                        rec = self._f.read(e["length"])
+                    td, td_crc = rec[to:to + tl], rec[to + tl:to + tl + CRC_LEN]
+                    pd, pd_crc = rec[po:po + pl], rec[po + pl:po + pl + CRC_LEN]
+                else:
+                    with self._lock:
+                        self._f.seek(e["doffset"])
+                        data = self._f.read(e["offset"] + e["length"] - e["doffset"])
+                    bf = io.BytesIO(data)
+                    td = bf.read(_read_varint(bf))
+                    td_crc = bf.read(CRC_LEN) if v3 else b""
+                    pd = bf.read(_read_varint(bf))
+                    pd_crc = bf.read(CRC_LEN) if v3 else b""
+            except Exception:
+                if not (self.salvage or quarantined):
+                    raise
+                e.setdefault("q", "chunk record unreadable")
+                self._pad_dictionaries(e["n_delta"], e.get("pd_delta", 0))
+                continue
+            try:
+                if v3:
+                    integrity.verify(td, td_crc, frame="template_delta",
+                                     offset=e["doffset"], chunk=k)
+                self.templates.extend(
+                    tuple(_deserialize_template(s)) for s in _unframe(td))
+            except Exception as err:
+                if not (self.salvage or quarantined):
+                    raise
+                if not quarantined:
+                    e["q"] = f"template delta damaged: {err}"
+                self.templates.extend([None] * e["n_delta"])
+            try:
+                if v3:
+                    integrity.verify(pd, pd_crc, frame="paramdict_delta",
+                                     offset=e["doffset"], chunk=k)
+                self.params.extend(_unframe(pd))
+            except Exception as err:
+                if not (self.salvage or quarantined):
+                    raise
+                if not quarantined:
+                    e["q"] = f"paramdict delta damaged: {err}"
+                self.params.extend([None] * e.get("pd_delta", 0))
 
     def __len__(self) -> int:
         return len(self.index)
 
     def chunk_blob(self, k: int) -> bytes:
         e = self.index[k]
+        if e.get("q"):
+            raise IntegrityError(f"chunk quarantined: {e['q']}",
+                                 frame="chunk", offset=e["offset"], chunk=k)
         with self._lock:
             self._f.seek(e["offset"])
             rec = self._f.read(e["length"])
-        if len(rec) != e["length"] or rec[:4] != CHUNK_MAGIC:
-            raise ValueError(f"corrupt LZJS chunk record {k}")
-        bf = io.BytesIO(rec[4:])
-        ln = _read_varint(bf)
-        blob = bf.read(ln)
-        if len(blob) != ln:
-            raise ValueError(f"corrupt LZJS chunk record {k}: short payload")
-        return blob
+        if len(rec) != e["length"]:
+            raise ValueError(
+                f"corrupt LZJS chunk record {k} at byte {e['offset']}: "
+                f"short record ({len(rec)}/{e['length']} bytes)")
+        parsed = parse_chunk_record(rec, k, e["offset"], self.version >= V3,
+                                    geometry=e.get("g"))
+        bad = parsed["bad"].get("chunk_payload")
+        if bad is not None:
+            raise bad
+        return parsed["blob"]
 
     def decode_chunk(self, k: int) -> list[str]:
         self.chunks_decoded += 1
@@ -555,13 +953,32 @@ class LZJSReader:
         return [k for k, e in enumerate(self.index)
                 if e["line_start"] < stop and e["line_start"] + e["n_lines"] > start]
 
+    def _chunk_lines_or_skip(self, k: int) -> list[str] | None:
+        """Decode chunk ``k``; None when it is quarantined (or, in
+        salvage mode, fails decode — then it is quarantined for the rest
+        of this reader's life and the failure recorded)."""
+        if self.index[k].get("q"):
+            return None
+        try:
+            return self.decode_chunk(k)
+        except ValueError as e:
+            if not self.salvage:
+                raise
+            self.index[k]["q"] = f"decode failed: {e}"
+            return None
+
     def read_range(self, start: int, count: int) -> list[str]:
-        """Lines [start, start+count) — decodes only covering chunks."""
+        """Lines [start, start+count) — decodes only covering chunks.
+        Quarantined chunks contribute nothing (their line ranges are
+        lost; ``stats()`` / fsck report them), so line numbering of the
+        survivors is preserved."""
         out: list[str] = []
         stop = start + count
         for k in self.covering_chunks(start, count):
             e = self.index[k]
-            d = self.decode_chunk(k)
+            d = self._chunk_lines_or_skip(k)
+            if d is None:
+                continue
             lo = max(0, start - e["line_start"])
             hi = min(e["n_lines"], stop - e["line_start"])
             out.extend(d[lo:hi])
@@ -572,10 +989,34 @@ class LZJSReader:
 
     def iter_lines(self):
         for k in range(len(self.index)):
-            yield from self.decode_chunk(k)
+            d = self._chunk_lines_or_skip(k)
+            if d is not None:
+                yield from d
+
+    def chunk_crc_status(self, k: int) -> str:
+        """Per-chunk integrity: ``"ok"``, ``"n/a"`` (pre-v3 container),
+        ``"quarantined: <why>"``, or the failing frame's error."""
+        e = self.index[k]
+        if e.get("q"):
+            return f"quarantined: {e['q']}"
+        if self.version < V3:
+            return "n/a"
+        with self._lock:
+            self._f.seek(e["offset"])
+            rec = self._f.read(e["length"])
+        if len(rec) != e["length"]:
+            return f"short record ({len(rec)}/{e['length']} bytes)"
+        try:
+            parsed = parse_chunk_record(rec, k, e["offset"], True,
+                                        geometry=e.get("g"))
+        except ValueError as err:
+            return str(err)
+        if parsed["bad"]:
+            return "; ".join(str(v) for v in parsed["bad"].values())
+        return "ok"
 
     def stats(self) -> dict:
-        return {
+        out = {
             "n_lines": self.n_lines,
             "n_chunks": len(self.index),
             "n_templates": len(self.templates),
@@ -583,8 +1024,13 @@ class LZJSReader:
             "level": self.footer.get("level"),
             "kernel": self.footer.get("kernel"),
             "format": self.footer.get("format"),
+            "version": self.version,
+            "crc": [self.chunk_crc_status(k) for k in range(len(self.index))],
             "chunks": self.index,
         }
+        if self.salvage_report is not None:
+            out["salvage"] = self.salvage_report
+        return out
 
     def close(self) -> None:
         if self._own:
@@ -595,24 +1041,35 @@ class LZJSReader:
 
 def iter_stream(f):
     """Forward-only decode of an LZJS byte stream (no seeking — works on
-    pipes): yields lines chunk by chunk, accumulating the delta frames."""
+    pipes): yields lines chunk by chunk, accumulating the delta frames.
+    v3 streams are CRC-verified frame by frame as they are read; errors
+    carry the byte offset, frame type and chunk index."""
     from .codec import _deserialize_template
 
     head = f.read(5)
     if len(head) < 5 or head[:4] != STREAM_MAGIC:
         raise ValueError(
             f"not an LZJS container: magic {bytes(head[:4])!r}, expected {STREAM_MAGIC!r}")
-    if head[4] not in (V1, VERSION):
+    if head[4] not in READ_VERSIONS:
         raise ValueError(f"LZJS container version {head[4]} is newer than "
-                         f"this reader (supports {V1} and {VERSION})")
-    hlen = _read_varint(f)
+                         f"this reader (supports {V1}..{V3})")
+    v3 = head[4] >= V3
+    hlen, hraw = _read_varint2(f)
+    hblob = f.read(hlen)
+    pos = 5 + len(hraw) + hlen
+    if v3:
+        integrity.verify(head + hraw + hblob, f.read(CRC_LEN),
+                         frame="header", offset=0)
+        pos += CRC_LEN
     try:
-        header = json.loads(zlib.decompress(f.read(hlen)).decode("utf-8"))
+        header = json.loads(zlib.decompress(hblob).decode("utf-8"))
     except Exception as e:
         raise ValueError(f"corrupt LZJS header: {e}") from e
     templates = [tuple(t) for t in header.get("seed_templates", [])]
     params: list[str] = list(header.get("seed_params", []))
+    k = 0
     while True:
+        rec_off = pos
         magic = f.read(4)
         if magic != CHUNK_MAGIC:
             # footer reached (zlib can't start with b"CHNK"): drain it and
@@ -621,21 +1078,63 @@ def iter_stream(f):
             tail = magic + f.read()
             if len(tail) < 16 or tail[-8:] != FOOTER_MAGIC:
                 raise ValueError(
-                    "truncated LZJS stream: ends without a footer "
-                    "(was the session closed?)")
+                    f"truncated LZJS stream at byte {rec_off}: ends without "
+                    f"a footer (was the session closed?)")
+            if v3:
+                flen = int.from_bytes(tail[-16:-8], "little")
+                if flen + 16 + CRC_LEN > len(tail):
+                    raise ValueError(
+                        f"corrupt LZJS footer at byte {rec_off}: length out of range")
+                integrity.verify(tail[:flen], tail[flen:flen + CRC_LEN],
+                                 frame="footer", offset=rec_off)
             return
-        blob = f.read(_read_varint(f))
-        td = f.read(_read_varint(f))
-        pd = f.read(_read_varint(f))
-        objects, meta = open_container(blob)
+        pos += 4
+        frames = {}
+        for frame, key in (("chunk_payload", "blob"), ("template_delta", "td"),
+                           ("paramdict_delta", "pd")):
+            ln, raw = _read_varint2(f)
+            data = f.read(ln)
+            if len(data) != ln:
+                raise ValueError(
+                    f"truncated LZJS stream: chunk {k} {frame} frame at byte "
+                    f"{pos + len(raw)} claims {ln} bytes, {len(data)} present")
+            pos += len(raw)
+            if v3:
+                integrity.verify(data, f.read(CRC_LEN), frame=frame,
+                                 offset=pos, chunk=k)
+            pos += ln + (CRC_LEN if v3 else 0)
+            frames[key] = data
+        if v3:
+            craw = bytearray(f.read(4))
+            if bytes(craw) != COMMIT_MAGIC:
+                raise IntegrityError(
+                    "missing commit record (chunk never sealed)",
+                    frame="commit", offset=pos, chunk=k)
+            vals = []
+            for _ in range(N_COMMIT_FIELDS):
+                v, raw = _read_varint2(f)
+                craw += raw
+                vals.append(v)
+            integrity.verify(bytes(craw), f.read(CRC_LEN), frame="commit",
+                             offset=pos, chunk=k)
+            if vals[0] != rec_off:
+                raise IntegrityError(
+                    f"commit record offset {vals[0]} does not match record "
+                    f"position {rec_off}", frame="commit", offset=pos, chunk=k)
+            pos += len(craw) + CRC_LEN
+        try:
+            objects, meta = open_container(frames["blob"])
+        except ValueError as e:
+            raise ValueError(f"LZJS chunk {k} at byte {rec_off}: {e}") from e
         stream = meta.get("stream")
         if stream is not None and stream["base"] != len(templates):
             raise ValueError(
-                f"LZJS template delta out of order: chunk base {stream['base']}, "
-                f"accumulated {len(templates)}")
-        templates.extend(tuple(_deserialize_template(s)) for s in _unframe(td))
-        params.extend(_unframe(pd))
+                f"LZJS template delta out of order: chunk {k} base "
+                f"{stream['base']}, accumulated {len(templates)}")
+        templates.extend(tuple(_deserialize_template(s)) for s in _unframe(frames["td"]))
+        params.extend(_unframe(frames["pd"]))
         yield from _decompress_objects(objects, meta, templates, params)
+        k += 1
 
 
 def decompress_lzjs(blob: bytes) -> list[str]:

@@ -10,6 +10,7 @@ parallelism (the paper's "highly parallel matching" mapped onto a pod).
 
 from __future__ import annotations
 
+import logging
 import os
 
 import jax
@@ -32,10 +33,165 @@ from .wildcard_match import wildcard_match as _wildcard_match
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
+# ------------------------------------------ backend fallback (DESIGN §13)
+#
+# Every kernel entry point dispatches down a kernel -> ref -> host chain:
+# the Pallas kernel first, the pure-jnp oracle if the kernel fails to
+# compile or run, and a numpy twin if jnp itself is unusable. A failed
+# tier is demoted for the rest of the process (no per-call retry storm)
+# and the demotion is logged once, structured, via the
+# ``repro.kernels.ops`` logger. ``backend_report()`` says which tier each
+# op is running on — the benchmark harness records it so device numbers
+# are never silently host numbers.
+
+_LOG = logging.getLogger("repro.kernels.ops")
+_DEMOTED: dict[str, int] = {}  # op -> first chain tier still trusted
+_FALLBACKS: dict[str, list[dict]] = {}  # op -> demotion events
+
+
+def _dispatch(op: str, *args, **kw):
+    chain = _CHAINS[op]
+    err: Exception | None = None
+    for i in range(_DEMOTED.get(op, 0), len(chain)):
+        backend, fn = chain[i]
+        try:
+            return fn(*args, **kw)
+        except Exception as e:  # demote this tier and try the next
+            err = e
+            _DEMOTED[op] = i + 1
+            nxt = chain[i + 1][0] if i + 1 < len(chain) else None
+            event = {"op": op, "backend": backend, "fallback": nxt,
+                     "interpret": INTERPRET,
+                     "error": f"{type(e).__name__}: {e}"}
+            _FALLBACKS.setdefault(op, []).append(event)
+            if nxt is not None:
+                _LOG.warning(
+                    "kernel backend %r failed for op %r, falling back to %r "
+                    "(one-time, sticky): %s", backend, op, nxt, event["error"])
+    raise err
+
+
+def backend_report() -> dict:
+    """{op: {backend, interpret, fallbacks}} for every kernel op — the
+    tier the next call will run on plus any demotion events so far."""
+    out = {}
+    for op, chain in _CHAINS.items():
+        tier = min(_DEMOTED.get(op, 0), len(chain) - 1)
+        out[op] = {"backend": chain[tier][0], "interpret": INTERPRET,
+                   "fallbacks": list(_FALLBACKS.get(op, []))}
+    return out
+
+
+def reset_backend_state() -> None:
+    """Forget demotions (tests; or after fixing the environment)."""
+    _DEMOTED.clear()
+    _FALLBACKS.clear()
+
+
+# numpy twins of the jnp oracles in ``ref`` — the last-resort tier when
+# neither the Pallas kernel nor jnp evaluation is usable
+
+def _simcount_host(logs, templates):
+    logs = np.asarray(logs, np.int32)
+    templates = np.asarray(templates, np.int32)
+    lv = (logs != ref.PAD_ID) & (logs != STAR_ID)
+    tv = (templates != ref.PAD_ID) & (templates != STAR_ID)
+    eq = logs[:, None, :, None] == templates[None, :, None, :]
+    eq = eq & lv[:, None, :, None] & tv[None, :, None, :]
+    return eq.any(axis=3).sum(axis=2).astype(np.int32)
+
+
+def _wildcard_match_np(logs, lens, templates, t_lens):
+    logs = np.asarray(logs, np.int32)
+    lens = np.asarray(lens, np.int32)
+    templates = np.asarray(templates, np.int32)
+    t_lens = np.asarray(t_lens, np.int32)
+    n, t = logs.shape
+    k, tt = templates.shape
+    col = np.zeros((n, k, t + 1), bool)
+    col[:, :, 0] = True
+    for j in range(tt):
+        tj = templates[:, j]
+        run = np.cumsum(col, axis=2) > 0
+        star_col = np.concatenate([np.zeros((n, k, 1), bool), run[:, :, :-1]], axis=2)
+        lit_hit = logs[:, None, :] == tj[None, :, None]
+        lit_col = np.concatenate(
+            [np.zeros((n, k, 1), bool), col[:, :, :-1] & lit_hit], axis=2)
+        new = np.where((tj == STAR_ID)[None, :, None], star_col, lit_col)
+        col = np.where((j < t_lens)[None, :, None], new, col)
+    idx = np.clip(lens, 0, t)
+    matched = col[np.arange(n)[:, None], np.arange(k)[None, :], idx[:, None]]
+    return matched & (lens <= t)[:, None] & (t_lens >= 0)[None, :]
+
+
+def _tokenize_hash_host(blocks, lens, pw1, pw2, *, delims):
+    blocks = np.asarray(blocks)
+    n, b = blocks.shape
+    bi = blocks.astype(np.int32)
+    in_len = np.arange(b)[None, :] < np.asarray(lens)[:, None]
+    tok = in_len & ~np.isin(bi, np.asarray(delims, np.int32))
+    prev = np.concatenate([np.zeros((n, 1), bool), tok[:, :-1]], axis=1)
+    starts = tok & ~prev
+    prefs = []
+    for pw in (pw1, pw2):
+        w = (bi.astype(np.uint32) + 1) * np.asarray(pw)[None, :] * tok.astype(np.uint32)
+        prefs.append(np.cumsum(w, axis=1, dtype=np.uint32))
+    return tok.astype(np.int8), starts.astype(np.int8), prefs[0], prefs[1]
+
+
+def _colcodec_transform_host(vals, lens, mode, ref_row):
+    vals = np.asarray(vals, np.int32)
+    r, width = vals.shape
+    pos = np.arange(width)[None, :]
+    in_len = pos < np.asarray(lens)[:, None]
+    vm = np.where(in_len, vals, 0).astype(np.int32)
+    prev = np.concatenate([np.zeros((r, 1), np.int32), vm[:, :-1]], axis=1)
+    d = np.where(pos > 0, vm - prev, 0).astype(np.int32)
+    dprev = np.concatenate([np.zeros((r, 1), np.int32), d[:, :-1]], axis=1)
+    dd = (d - dprev).astype(np.int32)
+    zz = np.left_shift(dd, 1) ^ np.right_shift(dd, 31)
+    fo = vm - np.asarray(ref_row, np.int32)[:, None]
+    mode = np.asarray(mode)
+    out = np.where((mode == 3)[:, None], fo,
+                   np.where((mode == 1)[:, None], d, zz))
+    return np.where(in_len, out, 0).astype(np.uint32)
+
+
+_CHAINS: dict[str, tuple] = {
+    "simcount": (
+        ("kernel", lambda lg, tp: _simcount(lg, tp, interpret=INTERPRET)),
+        ("ref", lambda lg, tp: ref.simcount_ref(lg, tp)),
+        ("host", lambda lg, tp: _simcount_host(lg, tp)),
+    ),
+    "wildcard_match": (
+        ("kernel", lambda *a: _wildcard_match(*a, interpret=INTERPRET)),
+        ("ref", lambda *a: ref.wildcard_match_ref(*a)),
+        ("host", lambda *a: _wildcard_match_np(*a)),
+    ),
+    "match_extract": (
+        ("kernel", lambda *a, n_slots: _match_extract(
+            *a, n_slots=n_slots, interpret=INTERPRET)),
+        # the jnp tier for the fused op IS the host anchor matcher
+        ("host", lambda *a, n_slots: ref.match_extract_ref(*a, n_slots=n_slots)),
+    ),
+    "tokenize_hash": (
+        ("kernel", lambda *a, delims: tokenize_hash(
+            *a, delims=delims, interpret=INTERPRET)),
+        ("ref", lambda *a, delims: ref.tokenize_hash_ref(*a, delims)),
+        ("host", lambda *a, delims: _tokenize_hash_host(*a, delims=delims)),
+    ),
+    "colcodec_transform": (
+        ("kernel", lambda *a: _colcodec_transform(*a, interpret=INTERPRET)),
+        ("ref", lambda *a: ref.colcodec_transform_ref(*a)),
+        ("host", lambda *a: _colcodec_transform_host(*a)),
+    ),
+}
+
+
 def simcount(logs, templates):
     """(N, T) x (K, Tt) int32 -> (N, K) int32 common-token counts."""
-    return _simcount(jnp.asarray(logs, jnp.int32), jnp.asarray(templates, jnp.int32),
-                     interpret=INTERPRET)
+    return _dispatch("simcount", jnp.asarray(logs, jnp.int32),
+                     jnp.asarray(templates, jnp.int32))
 
 
 def _pad_to(arr: np.ndarray, shape: tuple, fill=0) -> np.ndarray:
@@ -68,21 +224,22 @@ def wildcard_match(logs, lens, templates, t_lens, *, use_buckets: bool = True) -
         nb, tb = bucket(n, 256), bucket(t, 32)
         kb, ttb = bucket(k, 16), bucket(tt, 16)
         record_call("wildcard_match", (nb, tb, kb, ttb))
-        out = _wildcard_match(
+        out = _dispatch(
+            "wildcard_match",
             jnp.asarray(_pad_to(logs, (nb, tb))),
             jnp.asarray(_pad_to(lens_np, (nb,))),
             jnp.asarray(_pad_to(templates, (kb, ttb))),
             jnp.asarray(np.pad(t_lens_np, (0, kb - k), constant_values=-1)),
-            interpret=INTERPRET,
         )[:n, :k]
         # the padded width tb would let stars absorb PAD columns of lines
         # whose true length exceeds t: re-apply the host's truncation rule
         return np.asarray(out).astype(bool) & (lens_np <= t)[:, None]
-    out = _wildcard_match(
+    out = _dispatch(
+        "wildcard_match",
         jnp.asarray(logs), jnp.asarray(lens_np), jnp.asarray(templates),
-        jnp.asarray(t_lens_np), interpret=INTERPRET,
+        jnp.asarray(t_lens_np),
     )
-    return out.astype(bool)
+    return np.asarray(out).astype(bool)
 
 
 def pack_templates(templates: list[np.ndarray], t_max: int | None = None) -> tuple[np.ndarray, np.ndarray]:
@@ -234,9 +391,10 @@ def match_extract(ids: np.ndarray, lens: np.ndarray, templates: list[np.ndarray]
         tlens_p = np.pad(tlens, (0, kb - k), constant_values=-1)
     else:
         ids_p, lens_p, tmpl_p, tlens_p = ids, lens_np, tmpl, tlens
-    assign, spans = _match_extract(
+    assign, spans = _dispatch(
+        "match_extract",
         jnp.asarray(ids_p), jnp.asarray(lens_p), jnp.asarray(tmpl_p),
-        jnp.asarray(tlens_p), n_slots=n_slots, interpret=INTERPRET)
+        jnp.asarray(tlens_p), n_slots=n_slots)
     assign = np.asarray(assign[:n]).copy()
     spans = np.asarray(spans[:n]).copy()
     assign[lens_np > t] = -1  # truncated lines never match (host rule)
@@ -269,17 +427,18 @@ def delta_zigzag(vals: np.ndarray, lens: np.ndarray, mode: np.ndarray,
     if use_buckets:
         rb, cb = bucket(r, 8), bucket(width, 128)
         record_call("delta_zigzag", (rb, cb))
-        out = _colcodec_transform(
+        out = _dispatch(
+            "colcodec_transform",
             jnp.asarray(_pad_to(vals, (rb, cb))),
             jnp.asarray(_pad_to(lens_np, (rb,))),
             jnp.asarray(_pad_to(mode_np, (rb,))),
             jnp.asarray(_pad_to(ref, (rb,))),
-            interpret=INTERPRET,
         )[:r, :width]
     else:
-        out = _colcodec_transform(
+        out = _dispatch(
+            "colcodec_transform",
             jnp.asarray(vals), jnp.asarray(lens_np), jnp.asarray(mode_np),
-            jnp.asarray(ref), interpret=INTERPRET)
+            jnp.asarray(ref))
     return np.asarray(out)
 
 
@@ -329,10 +488,10 @@ def device_tokenize(lines: list[str], delimiters: str = DEFAULT_DELIMITERS):
     record_call("tokenize_hash", blocks.shape)
     pws = hash_powers(blocks.shape[1])
     delims = tuple(ord(c) for c in delimiters)
-    mask, starts, _, _ = tokenize_hash(
+    mask, starts, _, _ = _dispatch(
+        "tokenize_hash",
         jnp.asarray(blocks), jnp.asarray(blens),
-        jnp.asarray(pws[0][0]), jnp.asarray(pws[1][0]),
-        delims=delims, interpret=INTERPRET)
+        jnp.asarray(pws[0][0]), jnp.asarray(pws[1][0]), delims=delims)
     mask = np.asarray(mask, bool)
     out = []
     for i, e in enumerate(enc):
@@ -363,10 +522,10 @@ def device_encode_batch(contents: list[str], vocab, max_len: int,
     record_call("tokenize_hash", blocks.shape)
     pws = hash_powers(width_b)
     delims = tuple(ord(c) for c in delimiters)
-    mask, starts, pref1, pref2 = tokenize_hash(
+    mask, starts, pref1, pref2 = _dispatch(
+        "tokenize_hash",
         jnp.asarray(blocks), jnp.asarray(blens),
-        jnp.asarray(pws[0][0]), jnp.asarray(pws[1][0]),
-        delims=delims, interpret=INTERPRET)
+        jnp.asarray(pws[0][0]), jnp.asarray(pws[1][0]), delims=delims)
     mask = np.asarray(mask, bool)
     starts_m = np.asarray(starts, bool)
     pref1 = np.asarray(pref1)

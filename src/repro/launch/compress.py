@@ -17,6 +17,10 @@
         [--field F=V] [--json] [--limit N] [--stats] [--explain]
     PYTHONPATH=src python -m repro.launch.compress extract out.lzjs \
         [--template K] [--range START:COUNT] [--json]
+    # durability (DESIGN.md §13): diagnose / repair a damaged archive;
+    # --salvage on unpack/grep reads the survivors without repairing
+    PYTHONPATH=src python -m repro.launch.compress fsck out.lzjs [--json]
+    PYTHONPATH=src python -m repro.launch.compress repair out.lzjs [--json]
 
 ``pack``/``stream`` accept ``-`` as the input to read stdin. Input lines
 are streamed with bounded buffering (one chunk at a time), never via a
@@ -120,6 +124,9 @@ def _cmd_unpack(args) -> None:
 
     with open(args.infile, "rb") as f:
         magic = f.read(4)
+    if args.salvage and magic != STREAM_MAGIC:
+        sys.exit(f"--salvage needs an LZJS container; "
+                 f"{args.infile} has magic {magic!r}")
     if args.range:
         if magic != STREAM_MAGIC:
             sys.exit(f"--range needs an LZJS container (footer random access); "
@@ -131,14 +138,20 @@ def _cmd_unpack(args) -> None:
             start, count = int(start_s), int(count_s)
         except ValueError:
             sys.exit(f"--range wants START:COUNT (got {args.range!r})")
-        rd = LZJSReader(args.infile)
+        rd = LZJSReader(args.infile, salvage=args.salvage)
         lines = rd.read_range(start, count)
         note = f" (range {start}:{count}, decoded {rd.chunks_decoded}/{len(rd)} chunks)"
         rd.close()
     elif magic == STREAM_MAGIC:
-        rd = LZJSReader(args.infile)
+        rd = LZJSReader(args.infile, salvage=args.salvage)
         lines = rd.read_all()
         note = ""
+        if args.salvage:
+            lost = rd.stats().get("salvage", {}).get("lost_line_ranges") or \
+                [[e["line_start"], e["line_start"] + e["n_lines"]]
+                 for e in rd.index if e.get("q")]
+            if lost:
+                note = f" (salvage: lost line ranges {lost})"
         rd.close()
     else:
         with open(args.infile, "rb") as f:
@@ -204,9 +217,9 @@ def _cmd_grep(args) -> None:
         return
     stats = Q.QueryStats()
     if args.count:
-        print(Q.count(args.infile, q, stats=stats))
+        print(Q.count(args.infile, q, stats=stats, salvage=args.salvage))
     else:
-        hits = Q.search(args.infile, q, stats=stats)
+        hits = Q.search(args.infile, q, stats=stats, salvage=args.salvage)
         n_out = 0
         for no, line in hits:
             if args.json:
@@ -282,6 +295,43 @@ def _coltype_report(objects: dict, meta: dict) -> list[str]:
     return lines
 
 
+def _format_report(rep: dict, as_json: bool) -> None:
+    import json as _json
+
+    if as_json:
+        print(_json.dumps(rep, indent=2))
+        return
+    state = "clean" if rep["clean"] else "damaged"
+    print(f"{state}: v{rep['version']} container, {rep['n_chunks']} chunks, "
+          f"{rep['n_lines']} lines  header {'ok' if rep['header_ok'] else 'DAMAGED'}"
+          f"  footer {'ok' if rep['footer_ok'] else 'DAMAGED'}")
+    for k, s in enumerate(rep["chunk_status"]):
+        if s != "ok":
+            print(f"  chunk {k}: {', '.join(s)}")
+    if rep.get("envelopes_restored"):
+        print(f"restored {rep['envelopes_restored']} record envelope(s)")
+    if rep.get("quarantined"):
+        print(f"quarantined chunks: {rep['quarantined']}")
+    if rep.get("lost_line_ranges"):
+        for lo, hi in rep["lost_line_ranges"]:
+            print(f"  lost lines [{lo}, {hi})")
+
+
+def _cmd_fsck(args) -> None:
+    from repro.core.recover import fsck
+
+    rep = fsck(args.infile)
+    _format_report(rep, args.json)
+    sys.exit(0 if rep["clean"] else 1)
+
+
+def _cmd_repair(args) -> None:
+    from repro.core.recover import repair
+
+    rep = repair(args.infile)
+    _format_report(rep, args.json)
+
+
 def _cmd_inspect(args) -> None:
     from repro.core.codec import open_container, read_structured
     from repro.core.parallel import MULTI_MAGIC, iter_multi_chunks
@@ -293,12 +343,15 @@ def _cmd_inspect(args) -> None:
         rd = LZJSReader(io.BytesIO(blob))
         s = rd.stats()
         print(f"LZJS stream: {s['n_lines']} lines in {s['n_chunks']} chunks  "
-              f"level: {s['level']}  kernel: {s['kernel']}")
+              f"level: {s['level']}  kernel: {s['kernel']}  "
+              f"v{s['version']}" + ("" if s["version"] < 3 else " (checksummed)"))
         print(f"session store: {s['n_templates']} templates, {s['n_params']} params")
         for k, e in enumerate(s["chunks"][:args.max_chunks]):
+            crc = s["crc"][k]
+            tag = "" if crc in ("ok", "n/a") else f"  crc: {crc}"
             print(f"  chunk {k:3d}: lines [{e['line_start']}, "
                   f"{e['line_start']+e['n_lines']})  +{e['n_delta']} templates  "
-                  f"+{e.get('pd_delta', 0)} params  match {e['match_rate']:.3f}")
+                  f"+{e.get('pd_delta', 0)} params  match {e['match_rate']:.3f}{tag}")
         if len(s["chunks"]) > args.max_chunks:
             print(f"  ... {len(s['chunks']) - args.max_chunks} more chunks")
         # per-column type/savings breakdown of the first chunk (v2 only)
@@ -373,6 +426,9 @@ def main():
     u.add_argument("--workers", type=int, default=1)
     u.add_argument("--range", default=None, metavar="START:COUNT",
                    help="decode only this line range (LZJS footer random access)")
+    u.add_argument("--salvage", action="store_true",
+                   help="read a damaged LZJS container via the scan-rebuilt "
+                        "index (surviving chunks only)")
     i = sub.add_parser("inspect", help="per-archive / per-chunk stats")
     i.add_argument("infile")
     i.add_argument("--max-chunks", type=int, default=20)
@@ -399,15 +455,27 @@ def main():
                    help="print chunks-decoded accounting to stderr")
     g.add_argument("--explain", action="store_true",
                    help="print the per-template pushdown classification and exit")
+    g.add_argument("--salvage", action="store_true",
+                   help="query a damaged LZJS container (surviving chunks only)")
     x = sub.add_parser("extract", help="structured records (line/EventID/params)")
     x.add_argument("infile")
     x.add_argument("--template", type=int, default=None, metavar="K")
     x.add_argument("--range", default=None, metavar="START:COUNT")
     x.add_argument("--json", action="store_true", help="JSON-lines output")
+    fk = sub.add_parser("fsck", help="diagnose an LZJS container (read-only; "
+                                     "exit 1 when damaged)")
+    fk.add_argument("infile")
+    fk.add_argument("--json", action="store_true", help="full report as JSON")
+    rp = sub.add_parser("repair", help="repair an LZJS container in place "
+                                       "(rebuild footer, restore envelopes, "
+                                       "quarantine damaged chunks)")
+    rp.add_argument("infile")
+    rp.add_argument("--json", action="store_true", help="full report as JSON")
     args = ap.parse_args()
 
     {"pack": _cmd_pack, "stream": _cmd_stream, "unpack": _cmd_unpack,
-     "inspect": _cmd_inspect, "grep": _cmd_grep, "extract": _cmd_extract}[args.cmd](args)
+     "inspect": _cmd_inspect, "grep": _cmd_grep, "extract": _cmd_extract,
+     "fsck": _cmd_fsck, "repair": _cmd_repair}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -12,9 +12,12 @@ Two fixture generations are locked side by side (DESIGN.md §12):
 - ``hdfs_400.{lzjf,lzjm,lzjs}`` — **v1** text-column archives
   (``typed_columns=False``); these bytes must never change, or archives
   in the field become unreadable;
-- ``hdfs_400.v2.{lzjf,lzjm,lzjs}`` — **v2** typed-column archives (the
-  default encoder configuration), locking the typed descriptors, the
-  LZJS ``tcol`` manifests and the version bump.
+- ``hdfs_400.v2.{lzjf,lzjm,lzjs}`` — **v2** typed-column archives,
+  locking the typed descriptors, the LZJS ``tcol`` manifests and the
+  version bump;
+- ``hdfs_400.v3.{lzjf,lzjm,lzjs}`` — **v3** checksummed archives (the
+  default encoder configuration, DESIGN.md §13), locking the CRC32C
+  frame trailers and the sealed per-chunk commit records.
 """
 
 import io
@@ -33,10 +36,13 @@ SEED = 42
 CHUNK_LINES = 100
 
 
-def fixture_cfg(typed: bool = False) -> LogzipConfig:
+def fixture_cfg(typed: bool = False, integrity: bool = False) -> LogzipConfig:
+    # v1/v2 builders pin integrity=False explicitly: the golden bytes
+    # predate the v3 checksum trailers and must never grow them
     cfg = LogzipConfig(level=3, kernel="gzip", format=DATASETS[DATASET]["format"],
                        ise=ISEConfig(min_sample=100, max_iters=3, seed=0))
     cfg.typed_columns = typed
+    cfg.integrity = integrity
     return cfg
 
 
@@ -44,18 +50,19 @@ def fixture_lines() -> list[str]:
     return list(generate_lines(DATASET, N_LINES, seed=SEED))
 
 
-def _build_lzjf(lines: list[str], typed: bool) -> bytes:
-    return compress(lines, fixture_cfg(typed))
+def _build_lzjf(lines: list[str], typed: bool, integrity: bool = False) -> bytes:
+    return compress(lines, fixture_cfg(typed, integrity))
 
 
-def _build_lzjm(lines: list[str], typed: bool) -> bytes:
-    return compress_parallel(lines, fixture_cfg(typed), n_workers=1,
+def _build_lzjm(lines: list[str], typed: bool, integrity: bool = False) -> bytes:
+    return compress_parallel(lines, fixture_cfg(typed, integrity), n_workers=1,
                              chunk_lines=CHUNK_LINES)
 
 
-def _build_lzjs(lines: list[str], typed: bool) -> bytes:
+def _build_lzjs(lines: list[str], typed: bool, integrity: bool = False) -> bytes:
     buf = io.BytesIO()
-    with StreamingCompressor(buf, fixture_cfg(typed), chunk_lines=CHUNK_LINES) as sc:
+    with StreamingCompressor(buf, fixture_cfg(typed, integrity),
+                             chunk_lines=CHUNK_LINES) as sc:
         sc.feed(lines)
     return buf.getvalue()
 
@@ -67,6 +74,9 @@ BUILDERS = {
     "v2.lzjf": lambda lines: _build_lzjf(lines, True),
     "v2.lzjm": lambda lines: _build_lzjm(lines, True),
     "v2.lzjs": lambda lines: _build_lzjs(lines, True),
+    "v3.lzjf": lambda lines: _build_lzjf(lines, True, True),
+    "v3.lzjm": lambda lines: _build_lzjm(lines, True, True),
+    "v3.lzjs": lambda lines: _build_lzjs(lines, True, True),
 }
 
 

@@ -225,11 +225,16 @@ def test_future_version_rejected(hdfs8k):
 
     from repro.core.encode import pack_container, unpack_container
 
-    blob = compress(hdfs8k[:100], _cfg())
+    # integrity off: a v3 blob's whole-blob CRC would flag the tampered
+    # bytes before the version check could fire (that ordering is pinned
+    # by the corrupt-archive sweeps) — here we want the version error
+    cfg = _cfg()
+    cfg.integrity = False
+    blob = compress(hdfs8k[:100], cfg)
     container = zlib.decompress(blob[6:])
     objects = unpack_container(container)
     meta = json.loads(objects["meta"])
-    meta["v"] = 3
+    meta["v"] = 99
     objects["meta"] = json.dumps(meta).encode()
     doctored = blob[:6] + zlib.compress(pack_container(objects), 6)
     with pytest.raises(ValueError, match="version"):
@@ -243,7 +248,7 @@ def test_lzjs_typed_session_and_param_range(hdfs8k):
     blob = buf.getvalue()
     rd = LZJSReader(io.BytesIO(blob))
     assert rd.read_all() == hdfs8k
-    assert blob[4] == 2  # container version byte
+    assert blob[4] == 3  # container version byte (v3: frame CRCs + commits)
 
     # pick a numeric param column via structured extraction
     import re
@@ -316,18 +321,23 @@ def test_typed_search_agrees_with_grep(hdfs8k):
 
 
 def test_append_keeps_container_version(tmp_path, hdfs8k):
-    for typed, want in ((True, 2), (False, 1)):
-        path = str(tmp_path / f"s{int(typed)}.lzjs")
-        with StreamingCompressor(path, _cfg(typed), chunk_lines=500) as sc:
+    for typed, integrity, want in ((True, True, 3), (True, False, 2),
+                                   (False, False, 1)):
+        path = str(tmp_path / f"s{want}.lzjs")
+        cfg = _cfg(typed)
+        cfg.integrity = integrity
+        with StreamingCompressor(path, cfg, chunk_lines=500) as sc:
             sc.feed(hdfs8k[:1500])
         # append with cfg=None inherits; explicit cfg is coerced to the
         # container's version so chunks stay uniform — via a COPY: the
         # caller's cfg must come back untouched
         caller_cfg = _cfg(not typed)
+        caller_cfg.integrity = not integrity
         with StreamingCompressor(path, caller_cfg, chunk_lines=500,
                                  append=True) as sc:
             sc.feed(hdfs8k[1500:3000])
         assert caller_cfg.typed_columns == (not typed)
+        assert caller_cfg.integrity == (not integrity)
         with open(path, "rb") as f:
             assert f.read(5)[4] == want
         rd = LZJSReader(path)

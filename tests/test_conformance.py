@@ -55,7 +55,7 @@ def test_committed_archives_decode_to_source(ext, source_lines, committed):
     assert decompress_parallel(committed[ext]) == source_lines
 
 
-@pytest.mark.parametrize("ext", ["lzjs", "v2.lzjs"])
+@pytest.mark.parametrize("ext", ["lzjs", "v2.lzjs", "v3.lzjs"])
 def test_lzjs_fixture_read_range(ext, source_lines, committed):
     rd = LZJSReader(io.BytesIO(committed[ext]))
     assert rd.n_lines == len(source_lines)
@@ -71,6 +71,25 @@ def test_v2_fixtures_beat_v1_size(committed):
     scale, locked here at fixture size."""
     for ext in ("lzjf", "lzjm", "lzjs"):
         assert len(committed[f"v2.{ext}"]) < len(committed[ext]), ext
+
+
+def test_v3_fixture_checksum_overhead_bounded(committed):
+    """The integrity layer (frame CRCs + sealed commits) must stay a
+    rounding error: < 2% over the v2 bytes even at tiny fixture chunk
+    sizes (the benchmark gate enforces < 0.5% at real chunk sizes)."""
+    for ext in ("lzjf", "lzjm", "lzjs"):
+        v2, v3 = len(committed[f"v2.{ext}"]), len(committed[f"v3.{ext}"])
+        assert v3 < v2 * 1.02, f"{ext}: {v3} vs {v2}"
+
+
+def test_v3_fixture_fsck_clean(committed):
+    from repro.core import recover
+
+    rep = recover.fsck(io.BytesIO(committed["v3.lzjs"]))
+    assert rep["clean"]
+    rd = LZJSReader(io.BytesIO(committed["v3.lzjs"]))
+    assert all(s == "ok" for s in rd.stats()["crc"])
+    rd.close()
 
 
 def test_v2_fixture_manifests_carry_coltypes(committed):

@@ -137,10 +137,16 @@ def test_delta_chain_mismatch_rejected(clean):
     flen = int.from_bytes(blob[-16:-8], "little")
     import json
 
-    footer = json.loads(zlib.decompress(blob[-16 - flen:-16]).decode("utf-8"))
+    from repro.core import integrity
+
+    # v3 footer layout: [fb][crc4][len8][magic8] — resign after splicing
+    cut = -16 - integrity.CRC_LEN - flen
+    footer = json.loads(
+        zlib.decompress(blob[cut:cut + flen]).decode("utf-8"))
     footer["chunks"][1]["tpl_base"] += 1
     fb = zlib.compress(json.dumps(footer).encode("utf-8"))
-    mut = blob[:-16 - flen] + fb + len(fb).to_bytes(8, "little") + blob[-8:]
+    mut = blob[:cut] + fb + integrity.trailer(fb) \
+        + len(fb).to_bytes(8, "little") + blob[-8:]
     with pytest.raises(ValueError, match="delta chain"):
         LZJSReader(io.BytesIO(mut))
 

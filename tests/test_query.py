@@ -172,11 +172,16 @@ def test_manifest_free_container_still_correct(archives, corpus):
     query correctly — just without chunk skipping."""
     blob = archives["lzjs"]
     flen = int.from_bytes(blob[-16:-8], "little")
-    footer = json.loads(zlib.decompress(blob[-16 - flen:-16]).decode("utf-8"))
+    from repro.core import integrity
+
+    # v3 footer layout: [fb][crc4][len8][magic8] — resign after splicing
+    cut = -16 - integrity.CRC_LEN - flen
+    footer = json.loads(zlib.decompress(blob[cut:cut + flen]).decode("utf-8"))
     for e in footer["chunks"]:
         e.pop("manifest", None)
     fb = zlib.compress(json.dumps(footer).encode("utf-8"))
-    stripped = blob[:-16 - flen] + fb + len(fb).to_bytes(8, "little") + FOOTER_MAGIC
+    stripped = blob[:cut] + fb + integrity.trailer(fb) \
+        + len(fb).to_bytes(8, "little") + FOOTER_MAGIC
     st = Q.QueryStats()
     assert list(Q.search(stripped, Q.Substring("decommission"), stats=st)) == \
         grep(corpus, "decommission")
