@@ -20,6 +20,8 @@ Compares a freshly-measured throughput report against the committed
 - the v3 integrity layer (per-frame CRC32C + sealed commits, ISSUE 6)
   must cost under ``--v3-overhead-cap`` (default 0.5%) of archive size
   vs the v2 typed layout on every dataset;
+- the chunk-screen frames (ISSUE 7) must cost under ``--screen-cap``
+  (default 1%) of the query scenario's archive size;
 - the streaming scenario must close at least ``--gap-min`` of the
   chunking CR gap and its random-access check must have decoded only
   covering chunks;
@@ -61,6 +63,9 @@ def main() -> int:
     ap.add_argument("--v3-overhead-cap", type=float, default=0.005,
                     help="max archive-size overhead of the v3 integrity layer "
                          "(frame CRCs + sealed commits) vs the v2 typed layout")
+    ap.add_argument("--screen-cap", type=float, default=0.01,
+                    help="max fraction of the archive the chunk-screen "
+                         "frames may occupy (query scenario)")
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -111,6 +116,20 @@ def main() -> int:
                     f"{b['cr_typed']:.3f} (floor {floor:.3f})")
             checks.append(line)
             if r["cr_typed"] < floor:
+                failures.append(line)
+
+    qy = fresh.get("query")
+    if qy is not None and "screen_bytes_fraction" in qy:
+        # screen overhead scales with chunk size: only gate like-for-like
+        # runs (the quick smoke uses tiny chunks, where fixed per-chunk
+        # frames are proportionally larger by construction)
+        base_q = base.get("query") or {}
+        if qy.get("n_lines") == base_q.get("n_lines"):
+            frac = qy["screen_bytes_fraction"]
+            line = (f"screen frames {qy.get('screen_bytes', 0)}B = "
+                    f"{frac:.2%} of the archive (cap {args.screen_cap:.0%})")
+            checks.append(line)
+            if frac > args.screen_cap:
                 failures.append(line)
 
     s = fresh.get("streaming")

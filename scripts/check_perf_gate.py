@@ -20,7 +20,13 @@ Compares a freshly-measured throughput report against the committed
   query's hit set must agree with the decompress-then-grep baseline, and
   the *selective* queries must decode under ``--query-decode-cap`` of the
   LZJS chunks while beating the baseline wall clock (template pushdown
-  actually pushing down).
+  actually pushing down);
+- query v2 (ISSUE 7, chunk screens + aggregations): the ``param_value``
+  point query may open at most ``--point-chunk-cap`` chunks (O(1), not
+  O(n)); the gated ``field_eq`` query must decode under the same
+  ``--query-decode-cap`` fraction; every aggregation must agree with
+  decompress-then-compute, materialize zero rows, and beat the baseline
+  wall clock; the count fast path must materialize zero rows.
 
 Exit code 1 with a per-check report on any violation.
 
@@ -48,6 +54,9 @@ def main() -> int:
                     help="ignore stages below this fraction of recorded wall")
     ap.add_argument("--query-decode-cap", type=float, default=0.5,
                     help="max fraction of LZJS chunks a selective query may decode")
+    ap.add_argument("--point-chunk-cap", type=int, default=3,
+                    help="max chunks the param_value point query may open "
+                         "(screens make it O(1) in archive length)")
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -123,6 +132,45 @@ def main() -> int:
             line = f"query[{r['query']}] speedup vs baseline {spd:.2f}x (floor 1.00x)"
             checks.append(line)
             if spd <= 1.0:
+                failures.append(line)
+
+        # --- query v2 (ISSUE 7): screens + aggregations -------------
+        by_name = {r["query"]: r for r in qy.get("queries", [])}
+        pv = by_name.get("param_value")
+        if pv is not None:
+            line = (f"query[param_value] opened {pv['chunks_opened']}/"
+                    f"{pv['chunks_total']} chunks (cap {args.point_chunk_cap})")
+            checks.append(line)
+            if pv["chunks_opened"] > args.point_chunk_cap:
+                failures.append(line)
+        fe = by_name.get("field_eq")
+        if fe is not None:
+            frac = fe.get("fraction_chunks_decoded", 1.0)
+            line = (f"query[field_eq] chunks decoded {frac:.0%} "
+                    f"(cap {args.query_decode_cap:.0%})")
+            checks.append(line)
+            if frac >= args.query_decode_cap:
+                failures.append(line)
+        for a in qy.get("aggregations", []):
+            line = f"agg[{a['agg']}] == decompress-then-compute"
+            checks.append(line)
+            if not a.get("agree"):
+                failures.append(line)
+            line = f"agg[{a['agg']}] rows materialized {a['rows_materialized']} (must be 0)"
+            checks.append(line)
+            if a.get("rows_materialized", 1) != 0:
+                failures.append(line)
+            spd = a.get("speedup_vs_baseline") or 0.0
+            line = f"agg[{a['agg']}] speedup vs baseline {spd:.2f}x (floor 1.00x)"
+            checks.append(line)
+            if spd <= 1.0:
+                failures.append(line)
+        cf = qy.get("count_fast_path")
+        if cf is not None:
+            line = (f"count fast path rows materialized "
+                    f"{cf['rows_materialized']} (must be 0)")
+            checks.append(line)
+            if cf.get("rows_materialized", 1) != 0:
                 failures.append(line)
 
     for c in checks:

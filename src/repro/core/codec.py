@@ -173,6 +173,7 @@ class ChunkReader:
         self.fmt = LogFormat(meta["format"]) if meta.get("format") else None
         self._ok_pos = None
         self._header: dict[str, list[str]] = {}
+        self._header_distinct: dict[str, tuple[list[str], np.ndarray]] = {}
         self._events = None
         self._un = None
         self._matched_of_ok = None
@@ -247,6 +248,21 @@ class ChunkReader:
                 raise ValueError(f"no header field {field!r} in this archive")
             col = ColumnCodec(f"h.{field}").decode(self.objects, self.n_ok)
             self._header[field] = col
+        return col
+
+    def header_distinct(self, field: str) -> tuple[list[str], np.ndarray]:
+        """Header column ``field`` as (distinct values, inverse) — the
+        aggregation operators' entry point: predicates and group keys
+        evaluate per distinct value, multiplicities come from the inverse
+        (rows are never materialized)."""
+        col = self._header_distinct.get(field)
+        if col is None:
+            if self.fmt is None or field not in self.fmt.fields or \
+                    field == self.fmt.content_field:
+                raise ValueError(f"no header field {field!r} in this archive")
+            col = ColumnCodec(f"h.{field}").decode_distinct(
+                self.objects, self.n_ok, self.paravalues)
+            self._header_distinct[field] = col
         return col
 
     @property

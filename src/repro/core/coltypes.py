@@ -144,6 +144,39 @@ def canonical_int(s: str) -> bool:
         (s == "0" or not s.lstrip("-").startswith("0")) and s != "-0"
 
 
+def int_value_realizable(entry: dict, value: str) -> bool:
+    """Can a column summarized by the manifest ``tcol`` ``entry`` (an
+    integer-family summary carrying ``lo``/``hi`` bounds and possibly
+    shared affixes / a zero-pad width) realize ``value``?
+
+    Used by the query engine's ``FieldEq`` chunk screen — soundness
+    means answering True on ANY doubt (unknown affixes, no bounds), and
+    rejecting only values provably outside what classification admitted:
+    wrong affix, non-canonical rendering, or out of [lo, hi].
+    """
+    if entry.get("u"):
+        return True  # affixes unserializable: realizable set unknown
+    core = value
+    pre, suf = entry.get("pre", ""), entry.get("suf", "")
+    if pre:
+        if not core.startswith(pre):
+            return False
+        core = core[len(pre):]
+    if suf:
+        if not core.endswith(suf):
+            return False
+        core = core[:len(core) - len(suf)]
+    lo = entry.get("lo")
+    if lo is None:
+        return True  # no integer bounds recorded (e.g. ip_hex): undecidable
+    if entry.get("w", 0):
+        if len(core) != entry["w"] or not core.isdigit():
+            return False
+    elif not canonical_int(core):
+        return False
+    return lo <= int(core) <= entry["hi"]
+
+
 def zigzag(v: int) -> int:
     return (v << 1) if v >= 0 else ((-v << 1) - 1)
 

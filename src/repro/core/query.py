@@ -43,6 +43,7 @@ from .codec import ChunkReader, FILE_MAGIC, open_container
 # classification admits — one definition, imported
 from .coltypes import INT_RE as _PARAM_INT_RE
 from .coltypes import canonical_int as _canonical_int
+from .coltypes import int_value_realizable as _int_value_realizable
 from .tokenizer import DEFAULT_DELIMITERS, LogFormat
 
 try:  # Python >= 3.11
@@ -59,7 +60,8 @@ _DELIM_RUN_RE = re.compile(f"[{re.escape(DEFAULT_DELIMITERS)}]+")
 
 __all__ = [
     "Substring", "Regex", "FieldEq", "LineRange", "EventIs", "ParamRange", "And",
-    "QueryStats", "search", "count", "sample", "explain", "extract_records",
+    "QueryStats", "search", "count", "sample", "explain", "plan", "extract_records",
+    "count_by_template", "top_k", "time_histogram",
     "classify_template", "ALWAYS", "MAYBE", "NEVER",
 ]
 
@@ -328,13 +330,16 @@ def _header_possible_static(s: str, fields_mf: dict, ctx: "_Ctx") -> bool:
 # --------------------------------------------------------------- context
 
 _ALNUM_RUN_RE = re.compile(r"[0-9A-Za-z]+")
+# Bloom-screen edge runs scan the whole ParamDict for containment; a run
+# matching more candidates than this decides nothing (common fragment).
+_CAND_MAX = 64
 
 
 class _Ctx:
     """Per-query, per-archive evaluation state (caches + format info)."""
 
     def __init__(self, fmt: LogFormat | None, session_templates=None,
-                 session_params=None):
+                 session_params=None, screens_meta: dict | None = None):
         self.fmt = fmt
         self.session_templates = session_templates  # global tuples (LZJS)
         self.session_params = session_params        # level-3 ParamDict values
@@ -347,6 +352,67 @@ class _Ctx:
         self._lits: dict[str, list[str]] = {}
         self._param_first: dict[str, int] | None = None
         self._thr: dict[str, int | None] = {}
+        # footer screens meta (DESIGN.md §14): the set of ParaIDs the
+        # per-chunk Bloom filters cover, and the alnum-run length floor
+        self.screen_cold: frozenset | None = None
+        self.screen_minrun = 0
+        if screens_meta and session_params is not None:
+            self.screen_cold = frozenset(screens_meta.get("cold") or ())
+            self.screen_minrun = int(screens_meta.get("minrun", 0)) or 10 ** 9
+        self._params_complete: bool | None = None
+        self._cand: dict[str, tuple | None] = {}
+
+    def _first_map(self) -> dict:
+        if self._param_first is None:
+            first: dict = {}
+            for i, v in enumerate(self.session_params):
+                first.setdefault(v, i)
+            self._param_first = first
+        return self._param_first
+
+    @property
+    def params_complete(self) -> bool:
+        """False when any ParamDict entry is unknown (salvage padding) —
+        the Bloom screens then cannot name a needle's candidate ids."""
+        if self._params_complete is None:
+            self._params_complete = all(
+                v is not None for v in (self.session_params or ()))
+        return self._params_complete
+
+    def screen_candidates(self, s: str):
+        """Per alnum-run candidate ParaID sets for delimiter-free ``s``
+        against the chunk Bloom screens: a tuple of id-tuples, one per
+        run of length >= the screen ``minrun`` (shorter runs were never
+        inserted and decide nothing). An interior run must be an exact
+        dictionary member; an edge run any member containing it — edge
+        scans are capped at ``_CAND_MAX`` candidates (beyond that the run
+        is dropped as undecidable). ``None`` = screens unusable for ``s``."""
+        if (self.screen_cold is None or self.session_params is None
+                or not self.params_complete):
+            return None
+        if s in self._cand:
+            return self._cand[s]
+        params = self.session_params
+        out: list[tuple] = []
+        for m in _ALNUM_RUN_RE.finditer(s):
+            run = m.group()
+            if len(run) < self.screen_minrun:
+                continue
+            if m.start() > 0 and m.end() < len(s):
+                pid = self._first_map().get(run)
+                out.append(() if pid is None else (pid,))
+                continue
+            cands: list[int] = []
+            for j, v in enumerate(params):
+                if run in v:
+                    cands.append(j)
+                    if len(cands) > _CAND_MAX:
+                        break
+            if len(cands) <= _CAND_MAX:
+                out.append(tuple(cands))
+        res = tuple(out) if out else None
+        self._cand[s] = res
+        return res
 
     def classify(self, s: str, template) -> int:
         key = (s, tuple(template))
@@ -388,17 +454,12 @@ class _Ctx:
         if s in self._thr:
             return self._thr[s]
         params = self.session_params
-        if self._param_first is None:
-            first: dict[str, int] = {}
-            for i, v in enumerate(params):
-                first.setdefault(v, i)
-            self._param_first = first
         runs = list(_ALNUM_RUN_RE.finditer(s))
         thr: int | None = 0
         for m in runs:
             run = m.group()
             if m.start() > 0 and m.end() < len(s):
-                i = self._param_first.get(run)  # complete part: exact member
+                i = self._first_map().get(run)  # complete part: exact member
             else:
                 i = next((j for j, v in enumerate(params) if run in v), None)
             if i is None:
@@ -687,30 +748,102 @@ def _param_range_possible(pred: "ParamRange", manifest: dict) -> bool:
     return True
 
 
+def _reason(outcome, kind: str) -> bool:
+    """Record why a chunk was pruned; returns False for use at skip sites."""
+    if outcome is not None:
+        outcome.setdefault("reason", kind)
+    return False
+
+
+def _screen_passes(ctx: _Ctx, s: str, manifest: dict, screen, outcome) -> bool:
+    """May this chunk realize delimiter-free needle ``s`` through its
+    level-3 parameter values, judged by the chunk's Bloom screen? False
+    only on proof: every candidate id of some alnum run is either not yet
+    interned at this chunk (``>= pd_end``), or cold and rejected by the
+    chunk's split-block Bloom filter. Intro ids (``[pd_base, pd_end)``)
+    and hot ids pass without probing — they are referenced by many chunks
+    and were never inserted into the per-chunk filters."""
+    cand_sets = ctx.screen_candidates(s)
+    if cand_sets is None:
+        return True
+    pd_base = manifest.get("_pd_base", 0)
+    pd_end = manifest.get("_pd_end")
+    if pd_end is None:
+        return True
+    sc = False  # lazily loaded; False = not yet, None = load failed
+    for cands in cand_sets:
+        run_ok = False
+        for c in cands:
+            if c >= pd_end:
+                continue  # id interned after this chunk: cannot appear
+            if c >= pd_base or c not in ctx.screen_cold:
+                run_ok = True  # intro or hot id: assumed present
+                break
+            if sc is False:
+                sc = screen() if screen is not None else None
+            if sc is None or sc.param is None:
+                run_ok = True
+                break
+            if outcome is not None:
+                outcome["bloom_probes"] = outcome.get("bloom_probes", 0) + 1
+            if sc.may_contain_param(c):
+                if outcome is not None:
+                    outcome["bloom_passes"] = outcome.get("bloom_passes", 0) + 1
+                run_ok = True
+                break
+        if not run_ok:
+            return False
+    return True
+
+
 def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
-                    line_start: int, n_lines: int | None) -> bool:
+                    line_start: int, n_lines: int | None,
+                    screen=None, outcome: dict | None = None) -> bool:
     """May any line of this chunk satisfy ``pred``?  Judged WITHOUT
-    touching the chunk payload; conservative True when unsure."""
+    touching the chunk payload; conservative True when unsure.
+    ``screen`` is a zero-arg loader for the chunk's Bloom screen (or
+    None); ``outcome``, when given, collects the skip reason and Bloom
+    probe counts for ``QueryStats``."""
     if isinstance(pred, LineRange):
         if n_lines is None:
             return True
-        return line_start < pred.stop and line_start + n_lines > pred.start
+        return (line_start < pred.stop and line_start + n_lines > pred.start) \
+            or _reason(outcome, "line_range")
     if not manifest:
         return True
     if isinstance(pred, And):  # pragma: no cover - flattened upstream
-        return all(_chunk_possible(p, ctx, manifest, line_start, n_lines)
+        return all(_chunk_possible(p, ctx, manifest, line_start, n_lines,
+                                   screen, outcome)
                    for p in pred.preds)
     if isinstance(pred, FieldEq):
         entry = (manifest.get("fields") or {}).get(pred.field) or {}
         vals = entry.get("v")
-        return vals is None or pred.value in vals
+        if vals is not None:
+            return pred.value in vals or _reason(outcome, "field_values")
+        cs = entry.get("c")
+        if cs is not None and any(c not in cs for c in pred.value):
+            return _reason(outcome, "field_charset")
+        e = (manifest.get("tcol") or {}).get(f"h.{pred.field}")
+        if e:
+            if "lo" in e and not _int_value_realizable(e, pred.value):
+                return _reason(outcome, "field_bounds")
+            if e.get("t") == "dict" and "v" in e and pred.value not in e["v"]:
+                return _reason(outcome, "field_values")
+        if screen is not None:
+            sc = screen()
+            if sc is not None and \
+                    sc.field_may_contain(pred.field, pred.value) is False:
+                return _reason(outcome, "field_bloom")
+        return True
     if isinstance(pred, EventIs):
         used = manifest.get("used")
-        return used is None or pred.event in used
+        return used is None or pred.event in used or _reason(outcome, "event")
     if isinstance(pred, ParamRange):
-        return _param_range_possible(pred, manifest)
+        return _param_range_possible(pred, manifest) \
+            or _reason(outcome, "param_range")
     if isinstance(pred, Regex):
-        return all(_chunk_possible(Substring(l), ctx, manifest, line_start, n_lines)
+        return all(_chunk_possible(Substring(l), ctx, manifest, line_start,
+                                   n_lines, screen, outcome)
                    for l in ctx.required_literals(pred.pattern))
     if isinstance(pred, Substring):
         s = pred.s
@@ -723,6 +856,7 @@ def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
             return True
         tpls = ctx.session_templates
         pd_end = manifest.get("_pd_end")
+        bloom_used = False
         for g in used:
             if g >= len(tpls):
                 return True
@@ -731,20 +865,184 @@ def _chunk_possible(pred, ctx: _Ctx, manifest: dict | None,
                 continue
             if cls == MAYBE and _delim_free(s) and pd_end is not None:
                 # wildcards can only realize s through level-3 param
-                # values; the dictionary screen bounds which chunks can.
-                # Typed columns (v2) bypass the ParamDict, so their
-                # manifest summaries must also fail to realize s.
+                # values; the dictionary screen bounds which chunks can,
+                # and the per-chunk Bloom screen refines it to the chunks
+                # that actually reference the needle's (cold) ids. Typed
+                # columns (v2) bypass the ParamDict, so their manifest
+                # summaries must also fail to realize s.
                 thr = ctx.param_threshold(s)
-                if (thr is None or pd_end < thr) and \
-                        not _typed_realizable(s, manifest):
+                ruled_out = thr is None or pd_end < thr
+                if not ruled_out and \
+                        not _screen_passes(ctx, s, manifest, screen, outcome):
+                    ruled_out = bloom_used = True
+                if ruled_out and not _typed_realizable(s, manifest):
                     continue
             return True
         if ctx.fmt is None:
-            return False
+            return _reason(outcome, "param_bloom" if bloom_used else "template")
         if any(c in _WS for c in s) or not ctx.boundary_safe:
             return True
-        return _header_possible_static(s, manifest.get("fields") or {}, ctx)
+        return _header_possible_static(s, manifest.get("fields") or {}, ctx) \
+            or _reason(outcome, "param_bloom" if bloom_used else "template")
     return True
+
+
+# ------------------------------------------------ manifest-only counting
+
+def _header_static_impossible(s: str, ctx: _Ctx, manifest: dict) -> bool:
+    """Can we prove ``s`` never occurs inside (or straddling) the header
+    region of any parsed line of this chunk?"""
+    if ctx.fmt is None:
+        return True  # no header region exists
+    if any(c in _WS for c in s) or not ctx.boundary_safe:
+        return False
+    return not _header_possible_static(s, manifest.get("fields") or {}, ctx)
+
+
+def _fast_substring_class(s: str, tpl: tuple, ctx: _Ctx, manifest: dict) -> int:
+    """``classify`` sharpened by the chunk's dictionary watermark and
+    typed-column summaries: MAYBE becomes NEVER when no parameter value
+    of this chunk can realize ``s``."""
+    cls = ctx.classify(s, tpl)
+    pd_end = manifest.get("_pd_end")
+    if cls == MAYBE and _delim_free(s) and pd_end is not None:
+        thr = ctx.param_threshold(s)
+        if (thr is None or pd_end < thr) and not _typed_realizable(s, manifest):
+            return NEVER
+    return cls
+
+
+def _fast_group(preds, ctx: _Ctx, manifest: dict, gid: int,
+                line_start: int, n_lines: int | None):
+    """Uniform conjunction verdict for every row matched to session
+    template ``gid``: True (all rows hit), False (no row hits), None
+    (rows differ / undecidable from the manifest)."""
+    tpls = ctx.session_templates
+    if gid >= len(tpls):
+        return None
+    tpl = tpls[gid]
+    fields_mf = manifest.get("fields") or {}
+    undecided = False
+    for p in preds:
+        if isinstance(p, EventIs):
+            if p.event != gid:
+                return False
+        elif isinstance(p, LineRange):
+            if n_lines is None:
+                undecided = True
+            elif line_start >= p.stop or line_start + n_lines <= p.start:
+                return False
+            elif not (p.start <= line_start and line_start + n_lines <= p.stop):
+                undecided = True
+        elif isinstance(p, ParamRange):
+            if p.event != gid:
+                return False
+            if not _param_range_possible(p, manifest):
+                return False
+            undecided = True
+        elif isinstance(p, FieldEq):
+            entry = fields_mf.get(p.field) or {}
+            vals = entry.get("v")
+            if vals is not None:
+                if p.value not in vals:
+                    return False
+                if len(vals) == 1:
+                    continue  # single distinct value: every parsed row hits
+                undecided = True
+                continue
+            cs = entry.get("c")
+            if cs is not None and any(c not in cs for c in p.value):
+                return False
+            e = (manifest.get("tcol") or {}).get(f"h.{p.field}")
+            if e and "lo" in e and not _int_value_realizable(e, p.value):
+                return False
+            undecided = True
+        elif isinstance(p, Substring):
+            cls = _fast_substring_class(p.s, tpl, ctx, manifest)
+            if cls == ALWAYS:
+                continue
+            if cls == NEVER and _header_static_impossible(p.s, ctx, manifest):
+                return False
+            undecided = True
+        elif isinstance(p, Regex):
+            hit_never = False
+            for lit in ctx.required_literals(p.pattern):
+                if _fast_substring_class(lit, tpl, ctx, manifest) == NEVER \
+                        and _header_static_impossible(lit, ctx, manifest):
+                    hit_never = True
+                    break
+            if hit_never:
+                return False
+            undecided = True
+        else:  # pragma: no cover - predicate set is closed
+            undecided = True
+    return None if undecided else True
+
+
+def _fast_verbatim_text(preds, ctx: _Ctx, manifest: dict, t: str,
+                        line_start: int, n_lines: int | None):
+    """Verdict for one verbatim row given only its text — conservative
+    because the manifest does not say whether ``t`` is a full bad line or
+    an unmatched *content* (whose header was parsed away)."""
+    undecided = False
+    for p in preds:
+        if isinstance(p, (EventIs, ParamRange)):
+            return False  # verbatim rows are not template instances
+        if isinstance(p, LineRange):
+            if n_lines is None:
+                undecided = True
+            elif line_start >= p.stop or line_start + n_lines <= p.start:
+                return False
+            elif not (p.start <= line_start and line_start + n_lines <= p.stop):
+                undecided = True
+        elif isinstance(p, FieldEq):
+            vals = ((manifest.get("fields") or {}).get(p.field) or {}).get("v")
+            if vals is not None and p.value not in vals:
+                return False  # no parsed row (unmatched included) has it
+            undecided = True  # bad lines never match, unmatched rows may
+        elif isinstance(p, Substring):
+            if p.s in t:
+                continue  # content ⊆ line and bad text = line: either way a hit
+            if _header_static_impossible(p.s, ctx, manifest):
+                return False  # not in text, provably not via the header
+            undecided = True
+        else:  # Regex: searching a content for a full-line pattern is unsound
+            undecided = True
+    return None if undecided else True
+
+
+def _count_fast_chunk(preds, ctx: _Ctx, manifest: dict,
+                      line_start: int, n_lines: int | None):
+    """Exact hit count for this chunk from its manifest alone (EventID
+    histogram ``ec`` + verbatim texts), or None when any row's verdict
+    needs the payload. Sound: a None falls back to normal evaluation."""
+    if ctx.session_templates is None:
+        return None
+    used, ec = manifest.get("used"), manifest.get("ec")
+    if used is None or ec is None or len(ec) != len(used):
+        return None
+    nv = manifest.get("nv", 0)
+    if n_lines is not None and sum(ec) + nv != n_lines:
+        return None  # foreign/stale manifest: never trust it silently
+    total = 0
+    for gid, cnt in zip(used, ec):
+        r = _fast_group(preds, ctx, manifest, gid, line_start, n_lines)
+        if r is None:
+            return None
+        if r:
+            total += cnt
+    if nv and not any(isinstance(p, (EventIs, ParamRange)) for p in preds):
+        vb = manifest.get("verbatim")
+        if vb is None or len(vb) != nv:
+            return None
+        for t in vb:
+            r = _fast_verbatim_text(preds, ctx, manifest, t,
+                                    line_start, n_lines)
+            if r is None:
+                return None
+            if r:
+                total += 1
+    return total
 
 
 # --------------------------------------------------------------- archives
@@ -788,6 +1086,7 @@ class _ArchiveChunks:
             self.session_params = (self.reader.params
                                    if self.reader.footer.get("level") == 3 else None)
             self.n_lines = self.reader.n_lines
+            self.screens_meta = self.reader.footer.get("screens")
         else:
             if self.kind == "lzjm":
                 from .parallel import iter_multi_chunks
@@ -799,6 +1098,7 @@ class _ArchiveChunks:
             self.session_params = None
             self.n_lines = None
             self.fmt_str = None
+            self.screens_meta = None
             if self.blobs:
                 # format comes from the first chunk's meta (uniform across
                 # an archive written by this codebase)
@@ -806,7 +1106,9 @@ class _ArchiveChunks:
                 self.fmt_str = meta0.get("format")
 
     def chunks(self):
-        """Yield (index, line_start, n_lines | None, manifest | None, open_fn)."""
+        """Yield (index, line_start, n_lines | None, manifest | None, open_fn,
+        screen_fn | None). ``screen_fn`` lazily loads the chunk's SCRN
+        frame (``None`` when the archive carries no screens)."""
         if self.kind == "lzjs":
             rd = self.reader
             for k, e in enumerate(rd.index):
@@ -815,9 +1117,11 @@ class _ArchiveChunks:
                 mf = rd.manifest(k)
                 if mf:
                     mf = dict(mf)
+                    mf["_pd_base"] = e.get("pd_base", 0)
                     mf["_pd_end"] = e.get("pd_base", 0) + e.get("pd_delta", 0)
+                screen_fn = (lambda k=k: rd.screen(k)) if "sc" in e else None
                 yield (k, e["line_start"], e["n_lines"], mf,
-                       lambda k=k: rd.chunk_reader(k))
+                       lambda k=k: rd.chunk_reader(k), screen_fn)
         else:
             line_start = 0
             for k, blob in enumerate(self.blobs):
@@ -831,7 +1135,7 @@ class _ArchiveChunks:
                         raise ValueError(
                             f"truncated or corrupt logzip chunk {k}: {e}") from e
                 cr = open_fn()
-                yield (k, line_start, cr.n, None, lambda cr=cr: cr)
+                yield (k, line_start, cr.n, None, lambda cr=cr: cr, None)
                 line_start += cr.n
 
     def close(self):
@@ -843,7 +1147,16 @@ class _ArchiveChunks:
 
 @dataclass
 class QueryStats:
-    """Work accounting for one query execution."""
+    """Work accounting for one query execution.
+
+    ``chunks_skipped_by`` breaks the skips down by the screen that fired
+    (``template``, ``param_bloom``, ``field_values``, ``field_charset``,
+    ``field_bounds``, ``field_bloom``, ``event``, ``param_range``,
+    ``line_range``). ``bloom_probes``/``bloom_passes`` count per-chunk
+    Bloom-filter tests; ``bloom_false_positives`` the chunks a Bloom pass
+    opened that held no hit (observed FPP = fp / passes).
+    ``chunks_counted_from_manifest`` are chunks ``count`` resolved from
+    their manifest EventID histogram without opening."""
 
     chunks_total: int = 0
     chunks_skipped: int = 0
@@ -851,39 +1164,64 @@ class QueryStats:
     rows_materialized: int = 0
     hits: int = 0
     template_classes: dict = dfield(default_factory=dict)
+    chunks_skipped_by: dict = dfield(default_factory=dict)
+    bloom_probes: int = 0
+    bloom_passes: int = 0
+    bloom_false_positives: int = 0
+    chunks_counted_from_manifest: int = 0
 
     @property
     def fraction_chunks_decoded(self) -> float:
         return self.chunks_opened / max(self.chunks_total, 1)
 
 
+def _validate_preds(preds, fmt) -> None:
+    for p in preds:
+        if isinstance(p, FieldEq):
+            if fmt is None:
+                raise ValueError("field predicate on an archive without a header format")
+            if p.field not in fmt.fields or p.field == fmt.content_field:
+                raise ValueError(f"unknown header field {p.field!r} "
+                                 f"(format has {fmt.fields})")
+        elif isinstance(p, Regex):
+            # validate up front — inside the chunk loop a re.error
+            # would masquerade as a corrupt-archive ValueError
+            try:
+                re.compile(p.pattern)
+            except re.error as e:
+                raise ValueError(f"invalid regex {p.pattern!r}: {e}") from e
+
+
 def _execute(src, query, stats: QueryStats, *, want_lines: bool = True,
-             salvage: bool = False):
+             salvage: bool = False, count_from_manifest: bool = False):
     preds = _flatten(query)
     arch = _ArchiveChunks(src, salvage=salvage)
     try:
         fmt = LogFormat(arch.fmt_str) if arch.fmt_str else None
-        ctx = _Ctx(fmt, arch.session_templates, arch.session_params)
-        for p in preds:
-            if isinstance(p, FieldEq):
-                if fmt is None:
-                    raise ValueError("field predicate on an archive without a header format")
-                if p.field not in fmt.fields or p.field == fmt.content_field:
-                    raise ValueError(f"unknown header field {p.field!r} "
-                                     f"(format has {fmt.fields})")
-            elif isinstance(p, Regex):
-                # validate up front — inside the chunk loop a re.error
-                # would masquerade as a corrupt-archive ValueError
-                try:
-                    re.compile(p.pattern)
-                except re.error as e:
-                    raise ValueError(f"invalid regex {p.pattern!r}: {e}") from e
-        for k, line_start, n_lines, manifest, open_fn in arch.chunks():
+        ctx = _Ctx(fmt, arch.session_templates, arch.session_params,
+                   arch.screens_meta)
+        _validate_preds(preds, fmt)
+        for k, line_start, n_lines, manifest, open_fn, screen_fn in arch.chunks():
             stats.chunks_total += 1
-            if not all(_chunk_possible(p, ctx, manifest, line_start, n_lines)
-                       for p in preds):
+            outcome: dict = {}
+            possible = all(_chunk_possible(p, ctx, manifest, line_start,
+                                           n_lines, screen_fn, outcome)
+                           for p in preds)
+            stats.bloom_probes += outcome.get("bloom_probes", 0)
+            stats.bloom_passes += outcome.get("bloom_passes", 0)
+            if not possible:
                 stats.chunks_skipped += 1
+                r = outcome.get("reason", "other")
+                stats.chunks_skipped_by[r] = stats.chunks_skipped_by.get(r, 0) + 1
                 continue
+            if count_from_manifest and manifest:
+                cn = _count_fast_chunk(preds, ctx, manifest, line_start, n_lines)
+                if cn is not None:
+                    stats.chunks_counted_from_manifest += 1
+                    stats.hits += cn
+                    for _ in range(cn):
+                        yield (None, None)
+                    continue
             try:
                 cr = open_fn()
                 stats.chunks_opened += 1
@@ -924,6 +1262,8 @@ def _execute(src, query, stats: QueryStats, *, want_lines: bool = True,
                     stats.chunks_skipped += 1
                     continue
                 raise ValueError(f"truncated or corrupt logzip chunk {k}: {e}") from e
+            if outcome.get("bloom_passes") and not hits:
+                stats.bloom_false_positives += 1
             stats.hits += len(hits)
             yield from hits
     finally:
@@ -948,12 +1288,15 @@ def search(src, query, *, stats: QueryStats | None = None,
 
 def count(src, query, *, stats: QueryStats | None = None,
           salvage: bool = False) -> int:
-    """Number of matching lines — the no-materialization fast path: rows
-    proven to match by template classification are counted without ever
-    assembling their text."""
+    """Number of matching lines — the no-materialization fast path: chunks
+    whose manifest EventID histogram (``ec``) decides every row are
+    counted without opening (``stats.chunks_counted_from_manifest``), and
+    rows proven to match by template classification are counted without
+    ever assembling their text."""
     st = stats if stats is not None else QueryStats()
     n = 0
-    for _ in _execute(src, query, st, want_lines=False, salvage=salvage):
+    for _ in _execute(src, query, st, want_lines=False, salvage=salvage,
+                      count_from_manifest=True):
         n += 1
     return n
 
@@ -968,6 +1311,37 @@ def sample(src, query, k: int = 10, *, stats: QueryStats | None = None) -> list:
         if len(out) >= k:
             break
     return out
+
+
+def plan(src, query, *, salvage: bool = False) -> list[dict]:
+    """Per-chunk pushdown plan, computed without decoding anything: for
+    every chunk, whether the planner would open it or the screen reason
+    (``template`` / ``param_bloom`` / ``field_values`` / ``field_bounds``
+    / ...) that prunes it — the chunk-level companion to ``explain``'s
+    template table, surfaced by CLI ``grep --explain``."""
+    preds = _flatten(query)
+    arch = _ArchiveChunks(src, salvage=salvage)
+    try:
+        fmt = LogFormat(arch.fmt_str) if arch.fmt_str else None
+        ctx = _Ctx(fmt, arch.session_templates, arch.session_params,
+                   arch.screens_meta)
+        _validate_preds(preds, fmt)
+        out = []
+        for k, line_start, n_lines, manifest, open_fn, screen_fn in arch.chunks():
+            outcome: dict = {}
+            possible = all(_chunk_possible(p, ctx, manifest, line_start,
+                                           n_lines, screen_fn, outcome)
+                           for p in preds)
+            out.append({
+                "chunk": k,
+                "lines": [line_start, line_start + n_lines],
+                "open": bool(possible),
+                "reason": None if possible else outcome.get("reason", "other"),
+                "bloom_probes": outcome.get("bloom_probes", 0),
+            })
+        return out
+    finally:
+        arch.close()
 
 
 def explain(src, query) -> list[dict]:
@@ -987,7 +1361,7 @@ def explain(src, query) -> list[dict]:
             tpls = list(enumerate(arch.session_templates))
         else:
             seen: dict[tuple, int | None] = {}
-            for _, _, _, _, open_fn in arch.chunks():
+            for _, _, _, _, open_fn, _screen in arch.chunks():
                 cr = open_fn()
                 if cr.level < 2:
                     continue
@@ -1023,7 +1397,7 @@ def extract_records(src, *, event: int | None = None,
     st = stats if stats is not None else QueryStats()
     arch = _ArchiveChunks(src, salvage=salvage)
     try:
-        for k, line_start, n_lines, manifest, open_fn in arch.chunks():
+        for k, line_start, n_lines, manifest, open_fn, _screen in arch.chunks():
             st.chunks_total += 1
             skip = False
             if line_range is not None and n_lines is not None:
@@ -1075,3 +1449,182 @@ def extract_records(src, *, event: int | None = None,
             yield from recs
     finally:
         arch.close()
+
+
+# ----------------------------------------------------------- aggregations
+#
+# Compressed-domain aggregation operators (DESIGN.md §14). All three
+# evaluate over *distinct* decoded rows with per-distinct multiplicities
+# — the hot loop is the weighted-histogram kernel
+# ``repro.kernels.ops.distinct_counts`` — and none materializes a line
+# (``stats.rows_materialized`` stays 0; correctness is property-tested
+# against decompress-then-compute).
+
+def _validate_agg_field(arch, field: str) -> None:
+    fmt = LogFormat(arch.fmt_str) if arch.fmt_str else None
+    if fmt is None:
+        raise ValueError("field aggregation on an archive without a header format")
+    if field not in fmt.fields or field == fmt.content_field:
+        raise ValueError(f"unknown header field {field!r} "
+                         f"(format has {fmt.fields})")
+
+
+def count_by_template(src, *, stats: QueryStats | None = None,
+                      salvage: bool = False) -> dict[int, int]:
+    """Per-EventID line counts over the whole archive. Chunks whose
+    manifest carries the ``ec`` EventID histogram are aggregated without
+    opening (``stats.chunks_counted_from_manifest``); others decode only
+    the per-line event index. Verbatim lines are not template instances
+    and are excluded. Keys are session-global EventIDs for LZJS archives,
+    chunk-local ids otherwise."""
+    st = stats if stats is not None else QueryStats()
+    out: dict[int, int] = {}
+    arch = _ArchiveChunks(src, salvage=salvage)
+    try:
+        for k, line_start, n_lines, manifest, open_fn, _screen in arch.chunks():
+            st.chunks_total += 1
+            if manifest:
+                used, ec = manifest.get("used"), manifest.get("ec")
+                if used is not None and ec is not None and len(ec) == len(used):
+                    st.chunks_counted_from_manifest += 1
+                    for g, c in zip(used, ec):
+                        out[g] = out.get(g, 0) + c
+                    continue
+            try:
+                cr = open_fn()
+            except ValueError:
+                if arch.salvage:
+                    st.chunks_skipped += 1
+                    continue
+                raise
+            st.chunks_opened += 1
+            if cr.level < 2 or not len(cr.events):
+                continue
+            # deferred: the manifest path must not pay the jax import
+            from repro.kernels import ops as _kops
+
+            counts = _kops.distinct_counts(cr.events, len(cr.templates))
+            used = cr.used_global
+            for kk, c in enumerate(counts.tolist()):
+                if not c:
+                    continue
+                g = used[kk] if used is not None else kk
+                out[g] = out.get(g, 0) + c
+    finally:
+        arch.close()
+    st.hits = sum(out.values())
+    return out
+
+
+def top_k(src, field: str | None = None, *, event: int | None = None,
+          star: int | None = None, k: int = 10,
+          stats: QueryStats | None = None,
+          salvage: bool = False) -> list[tuple[str, int]]:
+    """Top-``k`` most frequent values of a header field (``field=...``)
+    or of one template's parameter column (``event=..., star=...``),
+    with counts. Parameter mode skips chunks whose manifest proves the
+    EventID absent; ties break lexicographically for determinism."""
+    if (field is None) == (event is None):
+        raise ValueError("pass exactly one of field= or event= (with star=)")
+    if field is None and star is None:
+        raise ValueError("parameter mode needs both event= and star=")
+    from repro.kernels import ops as _kops
+
+    st = stats if stats is not None else QueryStats()
+    totals: dict[str, int] = {}
+    arch = _ArchiveChunks(src, salvage=salvage)
+    try:
+        if field is not None:
+            _validate_agg_field(arch, field)
+        for kc, line_start, n_lines, manifest, open_fn, _screen in arch.chunks():
+            st.chunks_total += 1
+            if field is None and manifest:
+                used = manifest.get("used")
+                if used is not None and event not in used:
+                    st.chunks_skipped += 1
+                    continue
+            try:
+                cr = open_fn()
+            except ValueError:
+                if arch.salvage:
+                    st.chunks_skipped += 1
+                    continue
+                raise
+            st.chunks_opened += 1
+            if field is not None:
+                if not cr.n_ok:
+                    continue
+                uniq, inv = cr.header_distinct(field)
+            else:
+                if cr.level < 2 or not len(cr.events):
+                    continue
+                used = cr.used_global
+                kk = next((j for j in range(len(cr.templates))
+                           if (used[j] if used is not None else j) == event),
+                          None)
+                if kk is None:
+                    continue
+                n_stars = sum(1 for t in cr.templates[kk] if t is None)
+                if star >= n_stars:
+                    continue  # no such column here: contributes nothing
+                uniq, inv = cr.star_column(kk, star)
+            if not len(uniq):
+                continue
+            counts = _kops.distinct_counts(inv, len(uniq))
+            for u, c in zip(uniq, counts.tolist()):
+                if c:
+                    totals[u] = totals.get(u, 0) + c
+    finally:
+        arch.close()
+    st.hits = sum(totals.values())
+    return sorted(totals.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+
+
+_INT_CORE_RE = re.compile(r"[0-9]+")
+
+
+def time_histogram(src, field: str, *, bucket: int = 60,
+                   stats: QueryStats | None = None,
+                   salvage: bool = False) -> dict[int, int]:
+    """Histogram of an integer-valued header field (e.g. a timestamp
+    column), keyed by ``value // bucket`` — per chunk the field's
+    distinct values are parsed once and weighted by their per-distinct
+    multiplicities. The integer is the value's first digit run; values
+    without digits are ignored. Returned sorted by bucket."""
+    if bucket <= 0:
+        raise ValueError("bucket must be positive")
+    from repro.kernels import ops as _kops
+
+    st = stats if stats is not None else QueryStats()
+    out: dict[int, int] = {}
+    arch = _ArchiveChunks(src, salvage=salvage)
+    try:
+        _validate_agg_field(arch, field)
+        for kc, line_start, n_lines, manifest, open_fn, _screen in arch.chunks():
+            st.chunks_total += 1
+            try:
+                cr = open_fn()
+            except ValueError:
+                if arch.salvage:
+                    st.chunks_skipped += 1
+                    continue
+                raise
+            st.chunks_opened += 1
+            if not cr.n_ok:
+                continue
+            uniq, inv = cr.header_distinct(field)
+            if not len(uniq):
+                continue
+            counts = _kops.distinct_counts(inv, len(uniq))
+            for u, c in zip(uniq, counts.tolist()):
+                if not c:
+                    continue
+                m = _INT_CORE_RE.search(u)
+                if m is None:
+                    continue
+                b = int(m.group()) // bucket
+                out[b] = out.get(b, 0) + c
+    finally:
+        arch.close()
+    st.hits = sum(out.values())
+    return dict(sorted(out.items()))

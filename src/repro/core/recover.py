@@ -36,6 +36,7 @@ from . import integrity
 from .codec import KERNEL_BY_ID
 from .encode import split_column
 from .integrity import CRC_LEN
+from .screens import skip_opt_frames
 from .stream import (
     CHUNK_MAGIC,
     COMMIT_MAGIC,
@@ -193,7 +194,9 @@ def _has_unclaimed(data: bytes, start: int, index: list[dict]) -> bool:
     for e in index:
         if e["offset"] != pos:
             return True
-        pos = e["offset"] + e["length"]
+        # commit-derived lengths stop at the commit; footer lengths span
+        # any optional post-commit frames (SCRN) too — skip either way
+        pos = skip_opt_frames(data, e["offset"] + e["length"])
     return data[pos:pos + 4] == CHUNK_MAGIC
 
 
@@ -234,7 +237,7 @@ def _rescue_unclaimed(data: bytes, start: int, by_offset: dict,
             except Exception:
                 templates.extend([None] * e["n_delta"])
                 params.extend([None] * e.get("pd_delta", 0))
-            pos = e["offset"] + e["length"]
+            pos = skip_opt_frames(data, e["offset"] + e["length"])
             continue
         if data[pos:pos + 4] != CHUNK_MAGIC:
             break
@@ -283,7 +286,9 @@ def _rescue_unclaimed(data: bytes, start: int, by_offset: dict,
             "match_rate": 0.0, "manifest": None,
         })
         line += len(lines)
-        pos = end
+        # a rescued record's commit-derived end excludes any optional
+        # screen frame the writer appended after the commit
+        pos = skip_opt_frames(data, end)
     return rescued
 
 

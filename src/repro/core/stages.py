@@ -95,6 +95,14 @@ class LogzipConfig:
     # reproduces the v1/v2 bytes exactly (the committed v1/v2 golden
     # fixtures are built this way).
     integrity: bool = True
+    # per-chunk query screens (DESIGN.md §14): v3 LZJS sessions append a
+    # CRC-sealed optional SCRN frame after each chunk's commit — Bloom
+    # filters over cold ParamDict references and high-cardinality header
+    # fields — so point queries open O(1) chunks. Pre-screen readers
+    # skip the frames (they sit inside the indexed record range); False
+    # reproduces the screen-free v3 bytes exactly (golden fixtures).
+    screens: bool = True
+    screen_fpp: float = 0.02
 
 
 class StreamSession:

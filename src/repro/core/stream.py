@@ -53,6 +53,7 @@ from . import integrity
 from .codec import _decompress_objects, open_container, read_structured
 from .encode import ParamDict, join_column, split_column, write_varint
 from .integrity import CRC_LEN, IntegrityError
+from .screens import OPT_MAGIC, SCREEN_KIND, ScreenBuilder, parse_screen_payload
 from .stages import LogzipConfig, StreamSession, pack_stage, run_stages
 from .templates import TemplateStore
 from .timing import StageTimer
@@ -86,7 +87,7 @@ MANIFEST_TCOL_MAX = 64          # summarized typed columns per chunk
 MANIFEST_TCOL_VALS = 16         # mini-dict values stored verbatim
 
 
-def chunk_manifest(ch) -> dict:
+def chunk_manifest(ch, counts: bool = False) -> dict:
     """Per-chunk query-pushdown summary written into the footer index.
 
     ``used``: the chunk's session-global EventIDs (None when the chunk
@@ -188,6 +189,12 @@ def chunk_manifest(ch) -> dict:
         "verbatim": verbatim,
         "fields": fields,
     }
+    if counts and used_ids:
+        # per-used-EventID row histogram, aligned with ``used`` — the
+        # query engine's count fast path sums these without decoding a
+        # single column. ``assign`` holds session-GLOBAL store ids.
+        arr = ch.assign[ch.assign >= 0]
+        out["ec"] = [int((arr == g).sum()) for g in used_ids]
     if ch.meta.get("v", 1) >= 2:
         out["tcol"] = tcol  # absent entirely in v1 containers (byte-stable)
     return out
@@ -497,6 +504,13 @@ class StreamingCompressor:
         if cfg.template_store is not None:
             raise ValueError("pass the session store via store=, not cfg.template_store")
         self.cfg = cfg
+        # per-chunk query screens (DESIGN.md §14) — v3 only (older
+        # sequential readers would misparse the optional frames), and
+        # never on append: the builder's cross-chunk reference counters
+        # cannot be re-seeded soundly from an existing container, so an
+        # appended archive simply drops its (optional) screens meta.
+        self._screens = ScreenBuilder(cfg.screen_fpp) \
+            if (not append and cfg.integrity and cfg.screens) else None
         if not append:
             self._write_header()
 
@@ -602,6 +616,30 @@ class StreamingCompressor:
             rec += build_commit(self._pos, len(ch.blob), len(td), len(pd),
                                 line_start, n_chunk_lines, ch.tpl_base,
                                 ch.n_delta, ch.pd_base, pd_delta)
+        mf = chunk_manifest(ch, counts=self._screens is not None)
+        sc_entry = None
+        if self._screens is not None:
+            # screens ride AFTER the commit, inside the indexed record
+            # range: footer-driven readers that predate them skip the
+            # bytes for free, and the commit they follow stays the
+            # record's durability seal. Only ids below this chunk's
+            # pd_end are considered — the session ParamDict is growing
+            # concurrently on the main thread (chunk k+1's encode), and
+            # later ids cannot be realized by THIS chunk's values.
+            texts = list(ch.contents)
+            for i in ch.bad_idx:
+                texts.append(ch.lines[i])
+            to_id = self.session.paradict._to_id.get \
+                if self.cfg.level >= 3 else (lambda s: None)
+            old_refs, all_refs = self._screens.chunk_refs(
+                texts, to_id, ch.pd_base, ch.pd_base + pd_delta)
+            fcols = {f: col for f, col in ch.columns.items()
+                     if ch.fmt is not None and f != ch.fmt.content_field}
+            has_vals = {f: "v" in e for f, e in mf["fields"].items()}
+            frame = self._screens.chunk_screen(old_refs, all_refs, fcols, has_vals)
+            if frame is not None:
+                sc_entry = [self._pos + len(rec), len(frame)]
+                rec += frame
         invalidating = self._trunc_to is not None
         if invalidating:
             # append mode, first new chunk: only now is the old footer
@@ -612,15 +650,18 @@ class StreamingCompressor:
         self._f.write(bytes(rec))
         if invalidating:
             self._fsync()  # the sealing commit must be durable, not cached
-        self.index.append({
+        entry = {
             "offset": self._pos, "length": len(rec), "doffset": doffset,
             "line_start": line_start, "n_lines": n_chunk_lines,
             "tpl_base": ch.tpl_base, "n_delta": ch.n_delta,
             "pd_base": ch.pd_base,
             "pd_delta": pd_delta,
             "match_rate": round(ch.match_rate, 4),
-            "manifest": chunk_manifest(ch),
-        })
+            "manifest": mf,
+        }
+        if sc_entry is not None:
+            entry["sc"] = sc_entry
+        self.index.append(entry)
         self._pos += len(rec)
 
     def _drain(self) -> None:
@@ -655,6 +696,8 @@ class StreamingCompressor:
             }
             if self._version >= V3:
                 footer["typed"] = self.cfg.typed_columns
+            if self._screens is not None:
+                footer["screens"] = self._screens.meta()
             fb = zlib.compress(json.dumps(footer).encode("utf-8"))
             # chunk records (and their commits) reach disk before the
             # footer that points into them
@@ -733,6 +776,7 @@ class LZJSReader:
         self.salvage = bool(salvage)
         self.salvage_report: dict | None = None
         self.chunks_decoded = 0
+        self._screen_cache: dict[int, object] = {}
         try:
             self._load_normal()
         except ValueError:
@@ -940,6 +984,32 @@ class LZJSReader:
         then conservatively decodes the chunk)."""
         return self.index[k].get("manifest") or {}
 
+    def screen(self, k: int):
+        """Chunk ``k``'s parsed ``ChunkScreen`` (DESIGN.md §14), or None
+        when the chunk carries no screen frame or the frame fails its
+        seal — screens are advisory, so damage degrades to "no screen"
+        instead of failing the read."""
+        if k in self._screen_cache:
+            return self._screen_cache[k]
+        scr = None
+        e = self.index[k]
+        sc = e.get("sc")
+        if sc and not e.get("q"):
+            try:
+                with self._lock:
+                    self._f.seek(sc[0])
+                    raw = self._f.read(sc[1])
+                if len(raw) == sc[1] and raw[:4] == OPT_MAGIC \
+                        and raw[4:8] == SCREEN_KIND:
+                    plen, p = _take_varint(raw, 8)
+                    integrity.verify(raw[:p + plen], raw[p + plen:p + plen + CRC_LEN],
+                                     frame="screen", offset=sc[0], chunk=k)
+                    scr = parse_screen_payload(bytes(raw[p:p + plen]))
+            except (ValueError, IntegrityError, OSError):
+                scr = None
+        self._screen_cache[k] = scr
+        return scr
+
     def read_structured_chunk(self, k: int) -> dict:
         return read_structured(self.chunk_blob(k), ext_templates=self.templates)
 
@@ -1071,6 +1141,21 @@ def iter_stream(f):
     while True:
         rec_off = pos
         magic = f.read(4)
+        if v3 and magic == OPT_MAGIC:
+            # optional frame (screens today, anything tomorrow): verify
+            # the seal, then skip it WHATEVER its kind — forward compat
+            # by construction (DESIGN.md §14)
+            kind = f.read(4)
+            ln, raw = _read_varint2(f)
+            payload = f.read(ln)
+            if len(kind) != 4 or len(payload) != ln:
+                raise ValueError(
+                    f"truncated LZJS stream: optional frame at byte "
+                    f"{rec_off} claims {ln} bytes, {len(payload)} present")
+            integrity.verify(magic + kind + raw + payload, f.read(CRC_LEN),
+                             frame="optional", offset=rec_off, chunk=k)
+            pos = rec_off + 8 + len(raw) + ln + CRC_LEN
+            continue
         if magic != CHUNK_MAGIC:
             # footer reached (zlib can't start with b"CHNK"): drain it and
             # demand the trailing magic — a stream cut at a record

@@ -25,6 +25,7 @@ from repro.core.textops import first_occurrence_unique, runs_of
 from .colcodec import colcodec_transform as _colcodec_transform
 from .jitcache import bucket, bucket_stats, record_call, reset_counters  # noqa: F401 (re-exported)
 from .match_extract import match_extract as _match_extract
+from .scan import distinct_counts as _scan_distinct_counts
 from .simcount import simcount as _simcount
 from .tokenize import hash_powers, tokenize_hash
 from .wildcard_match import STAR_ID
@@ -157,6 +158,18 @@ def _colcodec_transform_host(vals, lens, mode, ref_row):
     return np.where(in_len, out, 0).astype(np.uint32)
 
 
+def _distinct_counts_host(inv, weights, n_bins: int) -> np.ndarray:
+    """numpy twin of ``scan.distinct_counts``: int32 ``np.add.at``
+    scatter (NOT ``np.bincount(weights=...)``, whose float64 accumulator
+    would break bit-identity with the int32 kernel lanes)."""
+    inv = np.asarray(inv, np.int64)
+    w = np.asarray(weights, np.int32)
+    out = np.zeros(n_bins, np.int32)
+    valid = (inv >= 0) & (inv < n_bins)
+    np.add.at(out, inv[valid], w[valid])
+    return out
+
+
 _CHAINS: dict[str, tuple] = {
     "simcount": (
         ("kernel", lambda lg, tp: _simcount(lg, tp, interpret=INTERPRET)),
@@ -184,6 +197,13 @@ _CHAINS: dict[str, tuple] = {
         ("kernel", lambda *a: _colcodec_transform(*a, interpret=INTERPRET)),
         ("ref", lambda *a: ref.colcodec_transform_ref(*a)),
         ("host", lambda *a: _colcodec_transform_host(*a)),
+    ),
+    "distinct_counts": (
+        ("kernel", lambda iv, w, d: _scan_distinct_counts(
+            iv, w, n_bins=d, interpret=INTERPRET)[0]),
+        ("ref", lambda iv, w, d: ref.distinct_counts_ref(iv, w, d)),
+        ("host", lambda iv, w, d: _distinct_counts_host(
+            np.asarray(iv), np.asarray(w), d)),
     ),
 }
 
@@ -442,6 +462,37 @@ def delta_zigzag(vals: np.ndarray, lens: np.ndarray, mode: np.ndarray,
     return np.asarray(out)
 
 
+# ----------------------------------------- compressed-domain scan (device)
+
+def distinct_counts(inv, n_bins: int, weights=None, *,
+                    prefer_host: bool | None = None) -> np.ndarray:
+    """Weighted histogram of a distinct-row inverse index (DESIGN.md
+    §14): ``out[b] = sum(weights[i] for inv[i] == b)`` -> (n_bins,) int32.
+    ``weights=None`` counts occurrences. Bit-identical on every tier.
+
+    ``prefer_host`` defaults to ``INTERPRET`` — benchmark honesty: in
+    interpret mode the Pallas grid loop is pure-Python-slow, and routing
+    the aggregation wall clock through it would report numbers that are
+    neither host nor accelerator performance. On a real device
+    (``REPRO_PALLAS_INTERPRET=0``) the kernel path is the default; tests
+    force ``prefer_host=False`` to exercise the full dispatch chain.
+    """
+    inv_np = np.asarray(inv, np.int64)
+    n = inv_np.shape[0]
+    w_np = np.ones(n, np.int32) if weights is None \
+        else np.asarray(weights, np.int32)
+    if prefer_host is None:
+        prefer_host = INTERPRET
+    if prefer_host or n == 0 or n_bins == 0:
+        return _distinct_counts_host(inv_np, w_np, n_bins)
+    nb, db = bucket(n, 256), bucket(n_bins, 128)
+    record_call("distinct_counts", (nb, db))
+    inv_p = np.pad(inv_np.astype(np.int32), (0, nb - n), constant_values=-1)
+    w_p = np.pad(w_np, (0, nb - n))
+    out = _dispatch("distinct_counts", jnp.asarray(inv_p), jnp.asarray(w_p), db)
+    return np.asarray(out)[:n_bins].astype(np.int32)
+
+
 # --------------------------------------------- byte tokenizer (device)
 
 DEFAULT_DELIMITERS = " \t,;:="
@@ -563,3 +614,4 @@ wildcard_match_ref = ref.wildcard_match_ref
 match_extract_ref = ref.match_extract_ref
 tokenize_hash_ref = ref.tokenize_hash_ref
 colcodec_transform_ref = ref.colcodec_transform_ref
+distinct_counts_ref = ref.distinct_counts_ref

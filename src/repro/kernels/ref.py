@@ -110,6 +110,17 @@ def colcodec_transform_ref(vals, lens, mode, ref):
     return jnp.where(in_len, out, 0).astype(jnp.uint32)
 
 
+def distinct_counts_ref(inv, weights, n_bins: int) -> jnp.ndarray:
+    """Oracle for ``kernels.scan.distinct_counts``: weighted histogram of
+    an inverse index via a one-hot compare — ``out[b] = sum of weights at
+    positions where inv == b``; rows outside [0, n_bins) contribute 0.
+    int32 accumulation, bit-identical to the kernel and the numpy twin."""
+    inv = jnp.asarray(inv, jnp.int32)
+    w = jnp.asarray(weights, jnp.int32)
+    hit = inv[:, None] == jnp.arange(n_bins, dtype=jnp.int32)[None, :]
+    return (hit * w[:, None]).sum(axis=0).astype(jnp.int32)
+
+
 def match_extract_ref(logs, lens, templates, t_lens, n_slots: int):
     """Oracle for ``kernels.match_extract.match_extract``: lowest-id
     matching template + per-star spans, via the *host* fused anchor

@@ -1,0 +1,70 @@
+"""Pallas kernel: the compressed-domain scan inner loop (DESIGN.md §14).
+
+The aggregation operators (``repro.core.query``: count_by_template,
+top_k, time_histogram) evaluate over *distinct* decoded rows with
+per-distinct multiplicities — the hot loop is a weighted histogram of an
+inverse index: ``out[b] = sum(weights[i] for i where inv[i] == b)``.
+
+One launch takes the inverse index and weights tiled over ``RN``-row
+blocks and accumulates into a single ``(1, D)`` int32 output block via a
+broadcast-iota one-hot compare — branch-free, no scatter. Rows are
+padded with ``inv = -1`` (matches no bin) and ``weight = 0``; the bin
+axis is bucketed to a power of two by ``ops.distinct_counts``. Output is
+bit-identical to the numpy ``np.add.at`` host twin (int32 accumulation
+on every tier — parity-tested kernel == ref == host).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .jitcache import record_trace
+
+RN = 8  # rows of the inverse index per tile
+
+
+def _distinct_counts_kernel(inv_ref, w_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    inv = inv_ref[...][:, 0]             # (RN,)
+    w = w_ref[...][:, 0]
+    d = out_ref.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (inv.shape[0], d), 1)
+    hit = inv[:, None] == cols           # one-hot per row; -1 pad hits nothing
+    out_ref[...] += (hit * w[:, None]).sum(axis=0, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "interpret"))
+def distinct_counts(
+    inv: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    n_bins: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(N,) int32 inverse index + (N,) int32 weights -> (1, n_bins) int32
+    weighted bin counts. ``inv`` rows outside [0, n_bins) contribute 0."""
+    record_trace("distinct_counts")
+    n = inv.shape[0]
+    r_pad = -n % RN
+    inv_p = jnp.pad(inv, ((0, r_pad),), constant_values=-1).reshape(-1, 1)
+    w_p = jnp.pad(weights, ((0, r_pad),)).reshape(-1, 1)
+    return pl.pallas_call(
+        _distinct_counts_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, n_bins), jnp.int32),
+        grid=((n + r_pad) // RN,),
+        in_specs=[
+            pl.BlockSpec((RN, 1), lambda i: (i, 0)),
+            pl.BlockSpec((RN, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_bins), lambda i: (0, 0)),
+        interpret=interpret,
+    )(inv_p, w_p)

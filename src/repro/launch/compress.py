@@ -15,6 +15,10 @@
     PYTHONPATH=src python -m repro.launch.compress grep out.lzjs PATTERN \
         [--regex] [--count] [--range START:COUNT] [--template K] \
         [--field F=V] [--json] [--limit N] [--stats] [--explain]
+    # compressed-domain aggregations (DESIGN.md §14; never materialize)
+    PYTHONPATH=src python -m repro.launch.compress agg out.lzjs \
+        (--by-template | --top FIELD | --top-param EVENT:STAR | \
+         --histogram FIELD [--bucket N]) [-k N] [--json] [--stats]
     PYTHONPATH=src python -m repro.launch.compress extract out.lzjs \
         [--template K] [--range START:COUNT] [--json]
     # durability (DESIGN.md §13): diagnose / repair a damaged archive;
@@ -214,6 +218,11 @@ def _cmd_grep(args) -> None:
         for row in Q.explain(args.infile, q):
             print(f"{row['class']:6s} [{row['event'] if row['event'] is not None else '-'}] "
                   f"{row['template']}")
+        for row in Q.plan(args.infile, q, salvage=args.salvage):
+            verdict = "open" if row["open"] else f"skip ({row['reason']})"
+            probes = f"  bloom probes {row['bloom_probes']}" if row["bloom_probes"] else ""
+            print(f"chunk {row['chunk']:4d} lines [{row['lines'][0]}:"
+                  f"{row['lines'][1]})  {verdict}{probes}")
         return
     stats = Q.QueryStats()
     if args.count:
@@ -230,9 +239,92 @@ def _cmd_grep(args) -> None:
             if args.limit and n_out >= args.limit:
                 break
     if args.stats:
-        print(f"query: {stats.hits} hits; decoded {stats.chunks_opened}/"
-              f"{stats.chunks_total} chunks (skipped {stats.chunks_skipped}), "
-              f"materialized {stats.rows_materialized} lines", file=sys.stderr)
+        _print_query_stats(stats)
+
+
+def _print_query_stats(stats) -> None:
+    print(f"query: {stats.hits} hits; decoded {stats.chunks_opened}/"
+          f"{stats.chunks_total} chunks (skipped {stats.chunks_skipped}), "
+          f"materialized {stats.rows_materialized} lines", file=sys.stderr)
+    if stats.chunks_skipped_by:
+        why = ", ".join(f"{k}: {v}" for k, v in
+                        sorted(stats.chunks_skipped_by.items(), key=lambda kv: -kv[1]))
+        print(f"query: skipped by screen -> {why}", file=sys.stderr)
+    if stats.bloom_probes:
+        fpp = stats.bloom_false_positives / max(stats.bloom_passes, 1)
+        print(f"query: bloom probes {stats.bloom_probes}, passes "
+              f"{stats.bloom_passes}, observed false positives "
+              f"{stats.bloom_false_positives} ({fpp:.1%})", file=sys.stderr)
+    if stats.chunks_counted_from_manifest:
+        print(f"query: {stats.chunks_counted_from_manifest} chunks counted "
+              f"from their manifest histogram (never opened)", file=sys.stderr)
+
+
+def _cmd_agg(args) -> None:
+    """Compressed-domain aggregations (DESIGN.md §14): every mode runs
+    over distinct decoded values with multiplicities — no line is ever
+    materialized — and ``--by-template`` needs only the footer manifests
+    on screened (v3) archives."""
+    import json as _json
+
+    from repro.core import query as Q
+
+    modes = [m for m in ("by_template", "top", "top_param", "histogram")
+             if getattr(args, m)]
+    if len(modes) != 1:
+        sys.exit("agg wants exactly one of --by-template / --top / "
+                 "--top-param / --histogram")
+    stats = Q.QueryStats()
+    mode = modes[0]
+    if mode == "by_template":
+        counts = Q.count_by_template(args.infile, stats=stats,
+                                     salvage=args.salvage)
+        tpl_by_gid = {}
+        try:
+            from repro.core.stream import LZJSReader
+
+            rd = LZJSReader(args.infile, salvage=args.salvage)
+            tpl_by_gid = {g: " ".join("<*>" if t is None else t for t in tpl)
+                          for g, tpl in enumerate(rd.templates)}
+            rd.close()
+        except (ValueError, OSError):
+            pass  # non-LZJS archive: chunk-local ids, no session store
+        rows = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        for g, c in rows:
+            if args.json:
+                print(_json.dumps({"event": g, "count": c,
+                                   "template": tpl_by_gid.get(g)}))
+            else:
+                print(f"{c:8d}  [{g}] {tpl_by_gid.get(g, '')}")
+    elif mode == "top":
+        for v, c in Q.top_k(args.infile, args.top, k=args.k, stats=stats,
+                            salvage=args.salvage):
+            print(_json.dumps({"value": v, "count": c}) if args.json
+                  else f"{c:8d}  {v}")
+    elif mode == "top_param":
+        parts = args.top_param.split(":")
+        try:
+            if len(parts) != 2:
+                raise ValueError
+            ev, star = int(parts[0]), int(parts[1])
+        except ValueError:
+            sys.exit(f"--top-param wants EVENT:STAR (got {args.top_param!r})")
+        for v, c in Q.top_k(args.infile, event=ev, star=star, k=args.k,
+                            stats=stats, salvage=args.salvage):
+            print(_json.dumps({"value": v, "count": c}) if args.json
+                  else f"{c:8d}  {v}")
+    else:
+        hist = Q.time_histogram(args.infile, args.histogram,
+                                bucket=args.bucket, stats=stats,
+                                salvage=args.salvage)
+        for b, c in hist.items():
+            if args.json:
+                print(_json.dumps({"bucket": b, "start": b * args.bucket,
+                                   "count": c}))
+            else:
+                print(f"{b * args.bucket:>12d}  {c:8d}  {'#' * min(c * 60 // max(max(hist.values()), 1), 60)}")
+    if args.stats:
+        _print_query_stats(stats)
 
 
 def _cmd_extract(args) -> None:
@@ -457,6 +549,27 @@ def main():
                    help="print the per-template pushdown classification and exit")
     g.add_argument("--salvage", action="store_true",
                    help="query a damaged LZJS container (surviving chunks only)")
+    a = sub.add_parser("agg", help="compressed-domain aggregations "
+                                   "(counts/top-k/histogram, no materialization)")
+    a.add_argument("infile")
+    a.add_argument("--by-template", action="store_true",
+                   help="line count per EventID (manifest histograms: "
+                        "v3 archives never open a chunk)")
+    a.add_argument("--top", default=None, metavar="FIELD",
+                   help="top-k values of a header field")
+    a.add_argument("--top-param", default=None, metavar="EVENT:STAR",
+                   help="top-k values of one template's parameter column")
+    a.add_argument("--histogram", default=None, metavar="FIELD",
+                   help="integer histogram of a header field (e.g. a timestamp)")
+    a.add_argument("--bucket", type=int, default=60,
+                   help="histogram bucket width (default 60)")
+    a.add_argument("-k", type=int, default=10, help="top-k size (default 10)")
+    a.add_argument("--json", action="store_true", help="JSON-lines output")
+    a.add_argument("--stats", action="store_true",
+                   help="print chunks-decoded accounting to stderr")
+    a.add_argument("--salvage", action="store_true",
+                   help="aggregate a damaged LZJS container "
+                        "(surviving chunks only)")
     x = sub.add_parser("extract", help="structured records (line/EventID/params)")
     x.add_argument("infile")
     x.add_argument("--template", type=int, default=None, metavar="K")
@@ -474,7 +587,8 @@ def main():
     args = ap.parse_args()
 
     {"pack": _cmd_pack, "stream": _cmd_stream, "unpack": _cmd_unpack,
-     "inspect": _cmd_inspect, "grep": _cmd_grep, "extract": _cmd_extract,
+     "inspect": _cmd_inspect, "grep": _cmd_grep, "agg": _cmd_agg,
+     "extract": _cmd_extract,
      "fsck": _cmd_fsck, "repair": _cmd_repair}[args.cmd](args)
 
 

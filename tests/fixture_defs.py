@@ -15,9 +15,15 @@ Two fixture generations are locked side by side (DESIGN.md §12):
 - ``hdfs_400.v2.{lzjf,lzjm,lzjs}`` — **v2** typed-column archives,
   locking the typed descriptors, the LZJS ``tcol`` manifests and the
   version bump;
-- ``hdfs_400.v3.{lzjf,lzjm,lzjs}`` — **v3** checksummed archives (the
-  default encoder configuration, DESIGN.md §13), locking the CRC32C
-  frame trailers and the sealed per-chunk commit records.
+- ``hdfs_400.v3.{lzjf,lzjm,lzjs}`` — **v3** checksummed archives
+  (DESIGN.md §13), locking the CRC32C frame trailers and the sealed
+  per-chunk commit records;
+- ``hdfs_400.v3s.lzjs`` — **v3 + chunk screens** (the default encoder
+  configuration, DESIGN.md §14), locking the optional ``OPT1``/``SCRN``
+  frames and the footer screens metadata. The plain v3 fixtures pin
+  ``screens=False`` so their bytes stay frozen: a v3 reader that
+  predates screens must keep reading them, and an old reader must skip
+  the v3s screen frames as unknown optional frames.
 """
 
 import io
@@ -36,13 +42,17 @@ SEED = 42
 CHUNK_LINES = 100
 
 
-def fixture_cfg(typed: bool = False, integrity: bool = False) -> LogzipConfig:
+def fixture_cfg(typed: bool = False, integrity: bool = False,
+                screens: bool = False) -> LogzipConfig:
     # v1/v2 builders pin integrity=False explicitly: the golden bytes
-    # predate the v3 checksum trailers and must never grow them
+    # predate the v3 checksum trailers and must never grow them.
+    # Likewise all pre-screen goldens pin screens=False — only the v3s
+    # builder opts in, locking the OPT1/SCRN frame bytes separately.
     cfg = LogzipConfig(level=3, kernel="gzip", format=DATASETS[DATASET]["format"],
                        ise=ISEConfig(min_sample=100, max_iters=3, seed=0))
     cfg.typed_columns = typed
     cfg.integrity = integrity
+    cfg.screens = screens
     return cfg
 
 
@@ -59,9 +69,10 @@ def _build_lzjm(lines: list[str], typed: bool, integrity: bool = False) -> bytes
                              chunk_lines=CHUNK_LINES)
 
 
-def _build_lzjs(lines: list[str], typed: bool, integrity: bool = False) -> bytes:
+def _build_lzjs(lines: list[str], typed: bool, integrity: bool = False,
+                screens: bool = False) -> bytes:
     buf = io.BytesIO()
-    with StreamingCompressor(buf, fixture_cfg(typed, integrity),
+    with StreamingCompressor(buf, fixture_cfg(typed, integrity, screens),
                              chunk_lines=CHUNK_LINES) as sc:
         sc.feed(lines)
     return buf.getvalue()
@@ -77,6 +88,7 @@ BUILDERS = {
     "v3.lzjf": lambda lines: _build_lzjf(lines, True, True),
     "v3.lzjm": lambda lines: _build_lzjm(lines, True, True),
     "v3.lzjs": lambda lines: _build_lzjs(lines, True, True),
+    "v3s.lzjs": lambda lines: _build_lzjs(lines, True, True, True),
 }
 
 

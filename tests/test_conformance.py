@@ -55,7 +55,7 @@ def test_committed_archives_decode_to_source(ext, source_lines, committed):
     assert decompress_parallel(committed[ext]) == source_lines
 
 
-@pytest.mark.parametrize("ext", ["lzjs", "v2.lzjs", "v3.lzjs"])
+@pytest.mark.parametrize("ext", ["lzjs", "v2.lzjs", "v3.lzjs", "v3s.lzjs"])
 def test_lzjs_fixture_read_range(ext, source_lines, committed):
     rd = LZJSReader(io.BytesIO(committed[ext]))
     assert rd.n_lines == len(source_lines)
@@ -105,6 +105,29 @@ def test_v2_fixture_manifests_carry_coltypes(committed):
     rd1 = LZJSReader(io.BytesIO(committed["lzjs"]))
     assert all("tcol" not in rd1.manifest(k) for k in range(len(rd1)))
     rd1.close()
+
+
+def test_v3s_fixture_carries_screens_and_v3_does_not(committed):
+    """The screened golden locks the OPT1/SCRN frame bytes and footer
+    screens metadata; the plain v3 golden must stay free of both — an
+    old reader's view of a v3 archive is unchanged by this PR."""
+    rd = LZJSReader(io.BytesIO(committed["v3s.lzjs"]))
+    assert rd.footer.get("screens"), "v3s fixture lost its screens meta"
+    assert any("sc" in e for e in rd.index)
+    assert any(rd.screen(k) is not None for k in range(len(rd)))
+    rd.close()
+    rd3 = LZJSReader(io.BytesIO(committed["v3.lzjs"]))
+    assert "screens" not in rd3.footer
+    assert not any("sc" in e for e in rd3.index)
+    rd3.close()
+
+
+def test_v3s_fixture_screen_overhead_bounded(committed):
+    """Screens stay cheap even at tiny 100-line fixture chunks: < 10%
+    over the plain v3 bytes (the benchmark gate enforces < 1% of the
+    archive at real chunk sizes)."""
+    v3, v3s = len(committed["v3.lzjs"]), len(committed["v3s.lzjs"])
+    assert v3s < v3 * 1.10, f"{v3s} vs {v3}"
 
 
 def test_fixture_queries_agree_with_grep(source_lines, committed):

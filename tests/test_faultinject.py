@@ -58,10 +58,15 @@ def archive():
 
 def _committed(lines: list[str], index: list[dict], n_bytes: int) -> list[str]:
     """Lines of every chunk whose record lies fully inside the first
-    ``n_bytes`` — exactly what survives a cut there."""
+    ``n_bytes`` — exactly what survives a cut there.
+
+    A chunk is committed once its ``CMT1`` seal is on disk; trailing
+    optional frames (``sc`` screens) are expendable, so a cut inside
+    them still leaves the chunk recoverable."""
     out: list[str] = []
     for e in index:
-        if e["offset"] + e["length"] <= n_bytes:
+        commit_end = e["sc"][0] if "sc" in e else e["offset"] + e["length"]
+        if commit_end <= n_bytes:
             out.extend(lines[e["line_start"]:e["line_start"] + e["n_lines"]])
     return out
 
