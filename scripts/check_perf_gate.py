@@ -57,6 +57,10 @@ def main() -> int:
     ap.add_argument("--point-chunk-cap", type=int, default=3,
                     help="max chunks the param_value point query may open "
                          "(screens make it O(1) in archive length)")
+    ap.add_argument("--require-compiled", action="store_true",
+                    help="fail (not just annotate) when device_pipeline ran "
+                         "in Pallas INTERPRET mode — for environments that "
+                         "promise a real accelerator")
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -103,9 +107,16 @@ def main() -> int:
         checks.append(line)
         if dp.get("recompiles_after_warmup", 0) != 0:
             failures.append(line)
-        # benchmark honesty: annotate (never gate) interpret-mode numbers
-        # so they are not mistaken for accelerator performance
-        if dp.get("interpret_mode"):
+        # benchmark honesty: annotate interpret-mode numbers so they are
+        # not mistaken for accelerator performance; --require-compiled
+        # escalates the annotation to a failure
+        if args.require_compiled:
+            line = (f"device_pipeline compiled (interpret_mode="
+                    f"{bool(dp.get('interpret_mode'))}, required compiled)")
+            checks.append(line)
+            if dp.get("interpret_mode"):
+                failures.append(line)
+        elif dp.get("interpret_mode"):
             print("note  device_pipeline ran in Pallas INTERPRET mode "
                   f"(backends: {dp.get('backends', {})}) — its lines/sec "
                   "calibrates relative cost only, not accelerator perf")

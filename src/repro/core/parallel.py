@@ -18,6 +18,7 @@ bulk of the work and needs no cross-shard communication.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import dataclasses
 import random
 import time
 from dataclasses import replace
@@ -46,17 +47,50 @@ TASK_TIMEOUT = 300.0  # per-task result deadline, seconds
 _TRANSIENT = (cf.TimeoutError, TimeoutError, OSError, cf.BrokenExecutor)
 
 
-def _map_resilient(fn, items: list, n_workers: int) -> list:
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff schedule with injectable timing (DESIGN.md §15).
+
+    ``sleep`` and ``rng`` default to the real clock / global RNG; fault
+    tests inject deterministic substitutes so retry paths are asserted
+    on exact delays instead of wall-clock races. The ingestion
+    supervisor's circuit breakers reuse the same policy object, so one
+    knob tunes both worker-pool and per-tenant resilience."""
+
+    attempts: int = RETRY_ATTEMPTS
+    base_delay: float = RETRY_BASE_DELAY
+    task_timeout: float = TASK_TIMEOUT
+    sleep: object = time.sleep
+    rng: object = random.random
+
+    def delay(self, attempt: int) -> float:
+        """Jittered exponential delay after failed round ``attempt``
+        (0-based): base * 2^attempt, +/-50% jitter from ``rng``."""
+        return self.base_delay * (2 ** attempt) * (0.5 + self.rng())
+
+    def backoff(self, attempt: int) -> float:
+        """Sleep for ``delay(attempt)`` via the injected clock; returns
+        the delay actually slept."""
+        d = self.delay(attempt)
+        self.sleep(d)
+        return d
+
+
+DEFAULT_RETRY_POLICY = RetryPolicy()
+
+
+def _map_resilient(fn, items: list, n_workers: int,
+                   policy: RetryPolicy | None = None) -> list:
     """``ex.map`` with bounded retries: each failed-transient task is
     retried in a fresh pool with jittered exponential backoff, and
-    whatever still fails after ``RETRY_ATTEMPTS`` rounds runs inline in
+    whatever still fails after ``policy.attempts`` rounds runs inline in
     this process — a dead pool degrades throughput, never correctness.
     Deterministic errors (``ValueError`` from corrupt input) raise on
     the first attempt."""
+    policy = policy or DEFAULT_RETRY_POLICY
     results: list = [None] * len(items)
     pending = list(range(len(items)))
-    delay = RETRY_BASE_DELAY
-    for attempt in range(RETRY_ATTEMPTS):
+    for attempt in range(policy.attempts):
         if not pending:
             return results
         ex = cf.ProcessPoolExecutor(max_workers=min(n_workers, len(pending)))
@@ -65,7 +99,7 @@ def _map_resilient(fn, items: list, n_workers: int) -> list:
             still = []
             for i in pending:
                 try:
-                    results[i] = futs[i].result(timeout=TASK_TIMEOUT)
+                    results[i] = futs[i].result(timeout=policy.task_timeout)
                 except _TRANSIENT:
                     still.append(i)
             pending = still
@@ -75,8 +109,7 @@ def _map_resilient(fn, items: list, n_workers: int) -> list:
             # wait=False: a hung worker must not wedge the retry loop
             ex.shutdown(wait=False, cancel_futures=True)
         if pending:
-            time.sleep(delay * (0.5 + random.random()))
-            delay *= 2
+            policy.backoff(attempt)
     for i in pending:  # last resort: inline, no pool to break
         results[i] = fn(items[i])
     return results

@@ -587,3 +587,20 @@ def repair(path) -> dict:
         lost.append([expect, footer["n_lines"]])
     report["lost_line_ranges"] = lost
     return report
+
+
+def ensure_clean(path) -> dict:
+    """fsck; repair only when needed. The ingestion daemon's tenant
+    bootstrap (DESIGN.md §15): every (re)open runs this first, so a
+    session killed mid-write is healed before WAL replay resumes it.
+    Returns the report, extended with ``n_lines`` — the durable line
+    count the WAL replay starts from."""
+    report = fsck(path)
+    if not report["clean"]:
+        report = repair(path)
+    rd = LZJSReader(path)
+    try:
+        report["n_lines"] = rd.n_lines
+    finally:
+        rd.close()
+    return report

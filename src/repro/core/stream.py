@@ -436,11 +436,22 @@ class StreamingCompressor:
     def __init__(self, out, cfg: LogzipConfig | None = None, *,
                  chunk_lines: int = 8192, chunk_bytes: int = 8 << 20,
                  store: TemplateStore | None = None, append: bool = False,
-                 stage_times: dict | None = None, pipeline: bool = True):
+                 stage_times: dict | None = None, pipeline: bool = True,
+                 sync_on_commit: bool = False, on_commit=None, opener=open):
         self.chunk_lines = int(chunk_lines)
         self.chunk_bytes = int(chunk_bytes)
         self.stage_times = stage_times
         self.pipeline = bool(pipeline)
+        # durability hooks (DESIGN.md §15): sync_on_commit fsyncs each
+        # chunk record as it lands, advancing ``committed_lines`` — the
+        # fsync-durable line watermark the ingestion daemon's WAL GC and
+        # crash recovery key on. ``on_commit(committed_lines)`` fires
+        # after every such fsync, on whichever thread performed the write
+        # (the pack worker under pipeline=True) — keep it cheap and
+        # thread-safe.
+        self.sync_on_commit = bool(sync_on_commit)
+        self.on_commit = on_commit
+        self._opener = opener
         self._pool = None           # lazy single-worker executor
         self._pending: list = []    # in-flight pack/write futures
         self._buf: list[str] = []
@@ -486,18 +497,20 @@ class StreamingCompressor:
             self._trunc_to = rd.footer_offset
             rd.close()
             self._own = True
-            self._f = open(out, "r+b")
+            self._f = self._opener(out, "r+b")
             self._pos = self._trunc_to
+            self.committed_lines = self.total_lines
         else:
             cfg = cfg or LogzipConfig()
             self.session = StreamSession(store)
             self.index: list[dict] = []
             self.total_lines = 0
+            self.committed_lines = 0
             self._own = isinstance(out, (str, os.PathLike))
             if self._own:
                 self._final_path = os.fspath(out)
                 self._tmp_path = self._final_path + ".tmp"
-                self._f = open(self._tmp_path, "wb")
+                self._f = self._opener(self._tmp_path, "wb")
             else:
                 self._f = out
 
@@ -648,8 +661,14 @@ class StreamingCompressor:
             self._f.seek(self._trunc_to)
             self._trunc_to = None
         self._f.write(bytes(rec))
-        if invalidating:
-            self._fsync()  # the sealing commit must be durable, not cached
+        if invalidating or self.sync_on_commit:
+            # the sealing commit must be durable, not cached; under
+            # sync_on_commit every chunk record is, advancing the
+            # committed-line watermark the daemon's WAL GC keys on
+            self._fsync()
+            self.committed_lines = line_start + n_chunk_lines
+            if self.on_commit is not None:
+                self.on_commit(self.committed_lines)
         entry = {
             "offset": self._pos, "length": len(rec), "doffset": doffset,
             "line_start": line_start, "n_lines": n_chunk_lines,
@@ -668,6 +687,21 @@ class StreamingCompressor:
         """Wait for in-flight pack/write jobs (re-raising any error)."""
         while self._pending:
             self._pending.pop(0).result()
+
+    def sync(self) -> int:
+        """Cut + write + fsync everything fed so far; returns the
+        committed-line watermark (== lines fed). The container is NOT
+        sealed — the footer is missing until ``close()`` — but every
+        chunk carries its commit, so ``repair`` recovers all of them.
+        No-op (beyond an fsync) when nothing new was fed."""
+        self.flush_chunk()
+        self._drain()
+        if self.total_lines > self.committed_lines:
+            self._fsync()
+            self.committed_lines = self.total_lines
+            if self.on_commit is not None:
+                self.on_commit(self.committed_lines)
+        return self.committed_lines
 
     # -- closing -------------------------------------------------------
     def close(self) -> dict:
@@ -732,6 +766,10 @@ class StreamingCompressor:
                     except OSError:
                         pass
             self._closed = True
+        if self.total_lines > self.committed_lines:
+            self.committed_lines = self.total_lines
+            if self.on_commit is not None:
+                self.on_commit(self.committed_lines)
         self._summary = {
             "n_lines": self.total_lines, "n_chunks": len(self.index),
             "n_templates": len(self.session.store.templates),

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["DATASETS", "generate_lines", "write_dataset"]
+__all__ = ["DATASETS", "generate_lines", "generate_multitenant", "write_dataset"]
 
 
 def _zipf_weights(n: int, s: float = 1.2) -> np.ndarray:
@@ -269,6 +269,45 @@ def generate_lines(name: str, n_lines: int, seed: int = 0, anomaly_rate: float =
         for f, v in hdr.items():
             line = line.replace(f"<{f}>", str(v), 1)
         yield line.replace("<Content>", content, 1)
+
+
+def generate_multitenant(tenants, n_lines: int, seed: int = 0, *,
+                         burstiness: float = 0.0, weights=None):
+    """Yield ``n_lines`` interleaved ``(tenant_id, line)`` pairs — the
+    ingestion daemon's soak corpus (ROADMAP item 4 seed).
+
+    ``tenants``: list of ``(tenant_id, dataset_name)``; each tenant gets
+    its own deterministic per-tenant stream (``generate_lines`` with a
+    seed derived from the global one), so the corpus stays a pure
+    function of ``(tenants, params, seed)`` — splitting the interleaved
+    output by tenant reproduces exactly what each single-tenant
+    generator would emit.
+
+    ``burstiness`` in [0, 1) is the Markov stay-probability boost: after
+    emitting for tenant ``t``, the next line comes from ``t`` again with
+    probability ``burstiness + (1 - burstiness) * w[t]`` — 0 gives pure
+    weighted interleaving, values near 1 give long single-tenant runs
+    (the firehose pattern backpressure tests want). ``weights`` skews
+    the steady-state mix (defaults to uniform).
+    """
+    if not 0.0 <= burstiness < 1.0:
+        raise ValueError(f"burstiness must be in [0, 1), got {burstiness}")
+    tenants = list(tenants)
+    rng = np.random.default_rng(seed)
+    w = np.asarray(weights if weights is not None else [1.0] * len(tenants),
+                   dtype=float)
+    if len(w) != len(tenants) or (w <= 0).any():
+        raise ValueError("weights must be positive, one per tenant")
+    w = w / w.sum()
+    # distinct derived seeds: tenant streams must not be clones of each
+    # other, and must not shift when the tenant list is reordered
+    gens = [iter(generate_lines(name, n_lines, seed=seed + 104729 * (k + 1)))
+            for k, (_tid, name) in enumerate(tenants)]
+    cur = int(rng.choice(len(tenants), p=w))
+    for _ in range(n_lines):
+        if rng.random() >= burstiness:
+            cur = int(rng.choice(len(tenants), p=w))
+        yield tenants[cur][0], next(gens[cur])
 
 
 def write_dataset(name: str, path: str, n_lines: int, seed: int = 0) -> int:

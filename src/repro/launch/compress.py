@@ -424,6 +424,35 @@ def _cmd_repair(args) -> None:
     _format_report(rep, args.json)
 
 
+def _cmd_serve(args) -> None:
+    """Run the multi-tenant ingestion daemon (DESIGN.md §15) until
+    SIGTERM/SIGINT. First signal = graceful drain (stop admitting,
+    flush, seal every tenant session); second = forced abort — crash-
+    equivalent, the per-tenant WAL carries recovery on the next start."""
+    import signal
+    import threading
+
+    from repro.core.codec import LogzipConfig
+    from repro.ingest.service import IngestDaemon
+
+    cfg = LogzipConfig(level=args.level, kernel=args.kernel,
+                       format=args.format) if args.format else None
+    address = (args.host, args.port) if args.port is not None else args.socket
+    daemon = IngestDaemon(args.root, address, cfg=cfg,
+                          chunk_lines=args.chunk_lines,
+                          queue_lines=args.queue_lines,
+                          max_tenants=args.max_tenants).start()
+    print(f"serving {args.root} on {daemon.address}", flush=True)
+
+    def _term(signum, frame):
+        threading.Thread(target=daemon.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _term)
+    signal.signal(signal.SIGINT, _term)
+    daemon.wait()
+    print("drained")
+
+
 def _cmd_inspect(args) -> None:
     from repro.core.codec import open_container, read_structured
     from repro.core.parallel import MULTI_MAGIC, iter_multi_chunks
@@ -584,12 +613,38 @@ def main():
                                        "quarantine damaged chunks)")
     rp.add_argument("infile")
     rp.add_argument("--json", action="store_true", help="full report as JSON")
+    sv = sub.add_parser("serve", help="multi-tenant ingestion daemon "
+                                      "(write-ahead durable; SIGTERM drains, "
+                                      "a second SIGTERM force-aborts)")
+    sv.add_argument("root", help="directory for per-tenant archives + WALs")
+    sv.add_argument("--socket", default=None, metavar="PATH",
+                    help="unix socket path (default ROOT/ingest.sock)")
+    sv.add_argument("--port", type=int, default=None,
+                    help="listen on TCP instead of a unix socket")
+    sv.add_argument("--host", default="127.0.0.1")
+    sv.add_argument("--format", default=None,
+                    help="default log format for new tenants (HELLO cfg wins)")
+    sv.add_argument("--level", type=int, default=3)
+    sv.add_argument("--kernel", default="gzip", choices=["gzip", "bzip2", "lzma"])
+    sv.add_argument("--chunk-lines", type=int, default=4096)
+    sv.add_argument("--queue-lines", type=int, default=1024,
+                    help="bounded per-tenant queue (backpressure above it)")
+    sv.add_argument("--max-tenants", type=int, default=64)
     args = ap.parse_args()
 
-    {"pack": _cmd_pack, "stream": _cmd_stream, "unpack": _cmd_unpack,
-     "inspect": _cmd_inspect, "grep": _cmd_grep, "agg": _cmd_agg,
-     "extract": _cmd_extract,
-     "fsck": _cmd_fsck, "repair": _cmd_repair}[args.cmd](args)
+    try:
+        {"pack": _cmd_pack, "stream": _cmd_stream, "unpack": _cmd_unpack,
+         "inspect": _cmd_inspect, "grep": _cmd_grep, "agg": _cmd_agg,
+         "extract": _cmd_extract, "serve": _cmd_serve,
+         "fsck": _cmd_fsck, "repair": _cmd_repair}[args.cmd](args)
+    except BrokenPipeError:
+        raise  # handled by the __main__ guard (exit 0, not an error)
+    except (OSError, ValueError) as e:
+        # operational failures (missing file, bad magic, damaged input,
+        # append onto a non-LZJS target) are one-line diagnostics with a
+        # distinct exit code — never tracebacks
+        print(f"error: {e}", file=sys.stderr)
+        raise SystemExit(2) from e
 
 
 if __name__ == "__main__":

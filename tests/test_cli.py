@@ -94,6 +94,70 @@ def test_stream_append_cli(log_file, tmp_path, monkeypatch, capsys):
     assert open(back, encoding="utf-8").read() == want + "\n" + want
 
 
+def _run_fail(argv, monkeypatch, capsys):
+    """Run a CLI invocation expected to fail operationally: returns
+    (exit_code, stderr)."""
+    monkeypatch.setattr(sys, "argv", ["compress"] + argv)
+    with pytest.raises(SystemExit) as ei:
+        main()
+    err = capsys.readouterr().err
+    return ei.value.code, err
+
+
+@pytest.mark.parametrize("argv", [
+    ["pack", "{missing}", "{out}"],
+    ["stream", "{missing}", "{out}", "--format", FMT],
+    ["unpack", "{missing}", "{out}"],
+    ["inspect", "{missing}"],
+    ["grep", "{missing}", "ERROR"],
+    ["agg", "{missing}", "--by-template"],
+    ["extract", "{missing}"],
+    ["fsck", "{missing}"],
+    ["repair", "{missing}"],
+])
+def test_missing_input_exits_2_one_line(argv, tmp_path, monkeypatch, capsys):
+    sub = {"missing": str(tmp_path / "nope.lzjs"), "out": str(tmp_path / "o")}
+    code, err = _run_fail([sub.get(a.strip("{}"), a) for a in argv],
+                          monkeypatch, capsys)
+    assert code == 2
+    assert err.startswith("error: ") and err.count("\n") == 1
+    assert "Traceback" not in err
+
+
+@pytest.mark.parametrize("argv", [
+    ["unpack", "{junk}", "{out}"],
+    ["inspect", "{junk}"],
+    ["grep", "{junk}", "ERROR"],
+    ["agg", "{junk}", "--by-template"],
+    ["fsck", "{junk}"],
+    ["repair", "{junk}"],
+])
+def test_bad_magic_exits_2_one_line(argv, tmp_path, monkeypatch, capsys):
+    junk = tmp_path / "junk.bin"
+    junk.write_bytes(b"definitely not a logzip archive\n" * 4)
+    sub = {"junk": str(junk), "out": str(tmp_path / "o")}
+    code, err = _run_fail([sub.get(a.strip("{}"), a) for a in argv],
+                          monkeypatch, capsys)
+    assert code == 2
+    assert err.startswith("error: ") and err.count("\n") == 1
+    assert "magic" in err
+    assert "Traceback" not in err
+
+
+def test_append_onto_non_lzjs_exits_2(tmp_path, monkeypatch, capsys):
+    target = tmp_path / "plain.log"
+    target.write_text("not an archive\n", encoding="utf-8")
+    src = tmp_path / "in.log"
+    src.write_text("one line", encoding="utf-8")
+    code, err = _run_fail(["stream", str(src), str(target), "--append"],
+                          monkeypatch, capsys)
+    assert code == 2
+    assert err.startswith("error: ") and "LZJS" in err and err.count("\n") == 1
+    assert "Traceback" not in err
+    # the target was not clobbered by the failed append
+    assert target.read_text(encoding="utf-8") == "not an archive\n"
+
+
 def test_inspect_all_three_magics(log_file, tmp_path, monkeypatch, capsys):
     lzj = str(tmp_path / "a.lzj")
     lzjm = str(tmp_path / "a.lzjm")

@@ -1,0 +1,471 @@
+"""Fault matrix for the ingestion daemon's durability core (DESIGN.md §15).
+
+The contract under test: an ACK covering sequence ``s`` means line ``s``
+is fsync-durable in the tenant WAL; a line's sequence number IS its line
+index in the tenant archive; after ANY crash — a torn WAL write at any
+record boundary, a kill between ack batches, ENOSPC on the WAL or the
+archive independently, a forced abort mid-drain — reopening the tenant
+store yields every acked line exactly once, in order. No sockets here:
+``TenantStore``/``TenantWorker`` are driven directly so every injection
+point is deterministic.
+"""
+
+import os
+
+import pytest
+
+from repro.core import wal
+from repro.core.codec import LogzipConfig
+from repro.core.faultinject import FaultyOpener, flip_bit
+from repro.core.parallel import RetryPolicy, _map_resilient
+from repro.core.stream import LZJSReader
+from repro.ingest import protocol as P
+from repro.ingest.protocol import ProtocolError
+from repro.ingest.service import TenantStore, TenantWorker
+from repro.ingest.supervisor import CircuitBreaker, TenantSupervisor
+
+FMT = "<Date> <Time> <Pid> <Level> <Component>: <Content>"
+CFG = LogzipConfig(level=2, kernel="gzip", format=FMT)
+
+
+def _line(i: int) -> str:
+    return (f"081109 2035{i % 60:02d} {i} INFO dfs.DataNode$PacketResponder: "
+            f"Received block blk_{i * 7 + 1} of size {i * 512} from /10.0.0.{i % 256}")
+
+
+def _lines(n: int) -> list[str]:
+    return [_line(i) for i in range(n)]
+
+
+def _read(path: str) -> list[str]:
+    rd = LZJSReader(path)
+    try:
+        return rd.read_all()
+    finally:
+        rd.close()
+
+
+# ---------------------------------------------------------------- WAL --
+class TestWal:
+    def test_roundtrip_and_group_commit(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        w = wal.WalWriter(d)
+        for i in range(10):
+            assert w.append(f"line {i}") == i
+        assert w.durable_seq == 0  # staged only: nothing ackable yet
+        assert w.sync() == 10
+        w.append("line 10")
+        w.abandon()  # kill -9 between ack batches: staged record vanishes
+        rep = wal.replay_wal(d)
+        assert [s for s, _ in rep.records] == list(range(10))
+        assert [t for _, t in rep.records] == [f"line {i}" for i in range(10)]
+        assert rep.end_seq == 10 and not rep.torn
+
+    def test_surrogateescape_payload_roundtrip(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        nasty = b"\xff\xfe raw bytes \x80".decode("utf-8", "surrogateescape")
+        with wal.WalWriter(d) as w:
+            w.append(nasty)
+            w.sync()
+        assert wal.replay_wal(d).records == [(0, nasty)]
+
+    def test_torn_tail_at_every_byte(self, tmp_path):
+        # one segment, 8 records; cut the file at EVERY byte offset from
+        # the header on: replay returns exactly the records wholly before
+        # the cut, flags mid-record cuts as torn, and never raises
+        d = str(tmp_path / "w.wal")
+        with wal.WalWriter(d) as w:
+            for i in range(8):
+                w.append(_line(i))
+            w.sync()
+        (_base, seg), = wal._segment_paths(d)
+        blob = open(seg, "rb").read()
+        bounds = [wal._HEADER_LEN]
+        while bounds[-1] < len(blob):
+            _seq, _txt, end = wal.parse_record(blob, bounds[-1])
+            bounds.append(end)
+        assert len(bounds) == 9
+        for cut in range(wal._HEADER_LEN, len(blob) + 1):
+            with open(seg, "wb") as f:
+                f.write(blob[:cut])
+            rep = wal.replay_wal(d)
+            intact = sum(1 for b in bounds[1:] if b <= cut)
+            assert [s for s, _ in rep.records] == list(range(intact)), cut
+            assert rep.torn == (cut not in bounds), cut
+
+    def test_torn_header_skips_segment(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        with wal.WalWriter(d, segment_bytes=64) as w:  # ~1 record/segment
+            for i in range(4):
+                w.append(_line(i))
+                w.sync()
+        segs = wal._segment_paths(d)
+        assert len(segs) == 4
+        blob = open(segs[0][1], "rb").read()
+        with open(segs[0][1], "wb") as f:
+            f.write(flip_bit(blob, 1))
+        rep = wal.replay_wal(d)
+        # the damaged segment is skipped whole; later generations survive
+        assert rep.torn and [s for s, _ in rep.records] == [1, 2, 3]
+
+    def test_missing_acked_record_raises(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        with wal.WalWriter(d, segment_bytes=64) as w:
+            for i in range(4):
+                w.append(_line(i))
+                w.sync()
+        segs = wal._segment_paths(d)
+        os.unlink(segs[1][1])  # a whole acked generation is gone
+        with pytest.raises(wal.WalError, match="gap"):
+            wal.replay_wal(d)
+
+    def test_rotation_and_gc(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        w = wal.WalWriter(d, segment_bytes=64)
+        for i in range(6):
+            w.append(_line(i))
+            w.sync()
+        assert len(wal._segment_paths(d)) == 6
+        # a CMT1 commit covering lines < 4 is durable: segments wholly
+        # below it die, the current one never does
+        assert w.gc(4) == 4
+        rep = wal.replay_wal(d, start=4)
+        assert [s for s, _ in rep.records] == [4, 5]
+        assert w.gc(100) == 1  # everything else dies; the current never
+        w.close()
+
+    def test_gc_of_segments_found_at_startup(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        with wal.WalWriter(d, segment_bytes=64) as w:
+            for i in range(4):
+                w.append(_line(i))
+                w.sync()
+        rep = wal.replay_wal(d)
+        w2 = wal.WalWriter(d, next_seq=rep.end_seq, segment_bytes=64)
+        w2.append(_line(4))
+        w2.sync()
+        # pre-restart segments have no in-memory last-seq: gc bounds them
+        # by the next segment's base and still reclaims all four
+        assert w2.gc(5) == 4
+        assert [s for s, _ in wal.replay_wal(d).records] == [4]
+        w2.close()
+
+    def test_restart_writes_fresh_segment_never_appends(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        with wal.WalWriter(d) as w:
+            w.append(_line(0))
+            w.sync()
+        with wal.WalWriter(d, next_seq=1) as w2:
+            w2.append(_line(1))
+            w2.sync()
+        assert len(wal._segment_paths(d)) == 2  # one per writer generation
+        assert [s for s, _ in wal.replay_wal(d).records] == [0, 1]
+
+    def test_enospc_sync_retries_into_fresh_segment(self, tmp_path):
+        d = str(tmp_path / "w.wal")
+        op = FaultyOpener()
+        w = wal.WalWriter(d, opener=op)
+        w.append("a" * 40)
+        assert w.sync() == 1
+        # disk fills mid-write: the batch tears, nothing is acked
+        op.write_limit = op.bytes_written + 10
+        w.append("b" * 40)
+        w.append("c" * 40)
+        with pytest.raises(OSError):
+            w.sync()
+        assert w.durable_seq == 1
+        # space freed: the retry must re-journal the WHOLE batch into a
+        # fresh segment (never after the torn tail)
+        op.write_limit = None
+        op.reset()
+        assert w.sync() == 3
+        assert len(wal._segment_paths(d)) == 2
+        rep = wal.replay_wal(d)
+        assert rep.torn  # first segment keeps its torn tail on disk
+        assert [(s, t[0]) for s, t in rep.records] == [(0, "a"), (1, "b"), (2, "c")]
+        w.close()
+
+
+# ------------------------------------------- crash-exact TenantStore --
+class TestCrashExactRecovery:
+    @pytest.mark.parametrize("n_acked", [0, 1, 4, 7, 8, 9, 15, 16, 20, 24])
+    def test_kill_between_ack_batches(self, tmp_path, n_acked):
+        # kill at every durability state the worker loop can be in:
+        # mid-batch (staged, unacked), at a batch boundary, at a chunk
+        # commit boundary (chunk_lines=8), and with the queue empty
+        root = str(tmp_path)
+        lines = _lines(24)
+        st = TenantStore(root, "t", CFG, chunk_lines=8)
+        for i in range(n_acked):
+            st.submit(i, lines[i])
+            if (i + 1) % 4 == 0:
+                st.ack_sync()
+        acked = st.ack_sync()
+        assert acked == n_acked
+        for i in range(n_acked, min(n_acked + 3, 24)):
+            st.submit(i, lines[i])  # staged only: allowed to vanish
+        st.crash()
+
+        st2 = TenantStore(root, "t", CFG, chunk_lines=8)
+        assert st2.resumed
+        assert st2.next_seq == acked  # WELCOME's resume point == the ack
+        for i in range(st2.next_seq, 24):
+            st2.submit(i, lines[i])  # the client resends from next_seq
+        st2.ack_sync()
+        st2.seal()
+        assert _read(st2.archive_path) == lines  # every line exactly once
+        assert not os.path.exists(st2.wal_dir)  # journal retired by seal
+
+    def test_double_crash_double_recovery(self, tmp_path):
+        root = str(tmp_path)
+        lines = _lines(30)
+        st = TenantStore(root, "t", CFG, chunk_lines=8)
+        for i in range(11):
+            st.submit(i, lines[i])
+        st.ack_sync()
+        st.crash()
+        st2 = TenantStore(root, "t", CFG, chunk_lines=8)
+        for i in range(st2.next_seq, 23):
+            st2.submit(i, lines[i])
+        st2.ack_sync()
+        st2.crash()  # crash again while holding replayed + new lines
+        st3 = TenantStore(root, "t", CFG, chunk_lines=8)
+        assert st3.next_seq == 23
+        for i in range(23, 30):
+            st3.submit(i, lines[i])
+        st3.seal()
+        assert _read(st3.archive_path) == lines
+
+    def test_resend_below_watermark_is_dropped(self, tmp_path):
+        st = TenantStore(str(tmp_path), "t", CFG)
+        lines = _lines(10)
+        for i, ln in enumerate(lines):
+            st.submit(i, ln)
+        st.ack_sync()
+        assert st.submit(3, lines[3]) is False  # duplicate: dedup by seq
+        assert st.submit(9, lines[9]) is False
+        st.seal()
+        assert _read(st.archive_path) == lines
+
+    def test_seq_gap_rejected(self, tmp_path):
+        st = TenantStore(str(tmp_path), "t", CFG)
+        with pytest.raises(ProtocolError) as ei:
+            st.submit(5, "skipped ahead")
+        assert ei.value.code == "seq_gap"
+        st.seal()
+
+    def test_enospc_on_wal_acks_nothing_then_recovers(self, tmp_path):
+        wal_op = FaultyOpener()
+        st = TenantStore(str(tmp_path), "t", CFG, chunk_lines=64,
+                         wal_opener=wal_op)
+        lines = _lines(10)
+        for i in range(6):
+            st.submit(i, lines[i])
+        assert st.ack_sync() == 6
+        wal_op.write_limit = wal_op.bytes_written + 5  # journal disk full
+        for i in range(6, 10):
+            st.submit(i, lines[i])
+        with pytest.raises(OSError):
+            st.ack_sync()
+        assert st.wal.durable_seq == 6  # the batch was never acked
+        wal_op.reset()
+        wal_op.write_limit = None
+        assert st.ack_sync() == 10  # staged batch retried whole
+        st.seal()
+        assert _read(st.archive_path) == lines
+
+    def test_enospc_on_archive_recovers_from_wal(self, tmp_path):
+        # the archive's disk fills, the WAL's does not: every acked line
+        # must come back from the journal after repair
+        root = str(tmp_path)
+        lines = _lines(30)
+        arch_op = FaultyOpener()
+        st = TenantStore(root, "t", CFG, chunk_lines=8, archive_opener=arch_op)
+        arch_op.write_limit = arch_op.bytes_written + 200  # tears a chunk write
+        sent = 0
+        try:
+            for i in range(30):
+                st.submit(i, lines[i])
+                sent = i + 1
+                if (i + 1) % 8 == 0:
+                    st.ack_sync()
+            st.ack_sync()
+            st.flush()
+        except OSError:
+            pass
+        assert arch_op.faults > 0  # the injection actually fired
+        st.crash()
+        st2 = TenantStore(root, "t", CFG, chunk_lines=8)
+        assert st2.next_seq <= sent
+        for i in range(st2.next_seq, 30):
+            st2.submit(i, lines[i])
+        st2.seal()
+        assert _read(st2.archive_path) == lines
+
+    def test_replay_onto_repair_salvaged_archive(self, tmp_path):
+        # two chunks commit, four lines stay WAL-only, then the archive
+        # grows a torn garbage tail (a crashed chunk write): repair drops
+        # the garbage and WAL replay completes the stream on top
+        root = str(tmp_path)
+        lines = _lines(20)
+        st = TenantStore(root, "t", CFG, chunk_lines=8)
+        for i in range(20):
+            st.submit(i, lines[i])
+        st.ack_sync()
+        st.crash()
+        with open(st.archive_path, "ab") as f:
+            f.write(b"CHNK" + os.urandom(37))  # torn partial record
+        st2 = TenantStore(root, "t", CFG, chunk_lines=8)
+        assert st2.next_seq == 20 and st2.replayed == 4
+        st2.seal()
+        assert _read(st2.archive_path) == lines
+
+    def test_zero_line_tenant(self, tmp_path):
+        root = str(tmp_path)
+        st = TenantStore(root, "t", CFG)
+        st.seal()
+        st.seal()  # idempotent
+        assert _read(st.archive_path) == []  # truly zero lines, no chunks
+        st2 = TenantStore(root, "t", CFG)
+        assert st2.resumed and st2.next_seq == 0
+        st2.seal()
+
+    def test_crash_right_after_bootstrap(self, tmp_path):
+        root = str(tmp_path)
+        st = TenantStore(root, "t", CFG)
+        st.crash()  # no line ever submitted
+        st2 = TenantStore(root, "t", CFG)
+        assert st2.resumed and st2.next_seq == 0
+        lines = _lines(5)
+        for i, ln in enumerate(lines):
+            st2.submit(i, ln)
+        st2.seal()
+        assert _read(st2.archive_path) == lines
+
+
+# --------------------------------------------------- worker + drain --
+class TestWorkerDrain:
+    def test_kill_mid_drain_recovers_every_acked_line(self, tmp_path):
+        root = str(tmp_path)
+        lines = _lines(200)
+        st = TenantStore(root, "t", CFG, chunk_lines=16)
+        frames = []
+        w = TenantWorker(st, batch_lines=8)
+        w.sender = frames.append
+        w.start()
+        for i, ln in enumerate(lines):
+            w.queue.put(("line", i, ln))
+        w.drain()  # graceful drain begins ...
+        w.abort()  # ... and a second SIGTERM kills it mid-flight
+        assert w.done.wait(20)
+        watermark = max((P.unpack_u64(fr[5:]) for fr in frames
+                         if fr[0] == P.T_ACK), default=0)
+        st2 = TenantStore(root, "t", CFG, chunk_lines=16)
+        assert st2.next_seq >= watermark  # no acked line went missing
+        for i in range(st2.next_seq, len(lines)):
+            st2.submit(i, lines[i])
+        st2.seal()
+        assert _read(st2.archive_path) == lines
+
+    def test_worker_failure_is_isolated_and_reported(self, tmp_path):
+        st = TenantStore(str(tmp_path), "t", CFG)
+        failures = []
+        frames = []
+        w = TenantWorker(st, on_failure=lambda t, e: failures.append((t, e)))
+        w.sender = frames.append
+        w.start()
+        w.queue.put(("line", 7, "a gap the store must reject"))
+        assert w.done.wait(10)
+        assert isinstance(w.failed, ProtocolError) and w.failed.code == "seq_gap"
+        assert failures and failures[0][0] == "t"
+        errs = [fr for fr in frames if fr[0] == P.T_ERROR]
+        assert errs and b"seq_gap" in errs[0]
+
+
+# ------------------------------------ retry policy + circuit breaker --
+def _flaky_once(arg):
+    """Fails with a transient OSError until its marker file exists."""
+    marker, val = arg
+    if not os.path.exists(marker):
+        open(marker, "w").close()
+        raise OSError("transient (injected)")
+    return val * 2
+
+
+class TestRetryAndBreaker:
+    def test_retry_policy_deterministic_schedule(self):
+        slept = []
+        p = RetryPolicy(attempts=4, base_delay=0.1,
+                        sleep=slept.append, rng=lambda: 0.5)
+        assert p.delay(0) == pytest.approx(0.1)
+        assert p.delay(2) == pytest.approx(0.4)
+        assert p.backoff(1) == pytest.approx(0.2)
+        assert slept == [pytest.approx(0.2)]
+
+    def test_map_resilient_uses_injected_policy(self, tmp_path):
+        slept = []
+        p = RetryPolicy(attempts=3, base_delay=0.01, task_timeout=60,
+                        sleep=slept.append, rng=lambda: 0.5)
+        items = [(str(tmp_path / f"m{i}"), i) for i in range(3)]
+        assert _map_resilient(_flaky_once, items, 2, policy=p) == [0, 2, 4]
+        assert slept == [pytest.approx(0.01)]  # one backoff round sufficed
+
+    def test_circuit_breaker_half_open_cycle(self):
+        t = [0.0]
+        br = CircuitBreaker(threshold=2, cooldown=10.0, clock=lambda: t[0])
+        assert br.allow()
+        br.record_failure()
+        assert not br.open and br.allow()
+        br.record_failure()
+        assert br.open and not br.allow()
+        t[0] = 10.0
+        assert br.allow()       # the half-open probe
+        assert not br.allow()   # ... is exclusive
+        br.record_failure()     # probe failed: re-armed for a new cooldown
+        assert not br.allow()
+        t[0] = 20.0
+        assert br.allow()
+        br.record_success()
+        assert not br.open and br.allow()
+
+    def test_supervisor_retries_then_trips_breaker(self):
+        t = [0.0]
+        slept = []
+        sup = TenantSupervisor(
+            RetryPolicy(attempts=2, base_delay=0.01,
+                        sleep=slept.append, rng=lambda: 0.5),
+            breaker_threshold=2, breaker_cooldown=5.0, clock=lambda: t[0])
+        calls = []
+
+        def bad():
+            calls.append(1)
+            raise OSError("mount gone (injected)")
+
+        with pytest.raises(ProtocolError) as ei:
+            sup.open_store("t", bad)
+        assert ei.value.code == "open_failed"
+        assert len(calls) == 2 and slept == [pytest.approx(0.01)]
+        with pytest.raises(ProtocolError):
+            sup.open_store("t", bad)  # second strike trips the breaker
+        calls.clear()
+        with pytest.raises(ProtocolError) as ei:
+            sup.open_store("t", bad)
+        assert ei.value.code == "circuit_open" and calls == []
+        t[0] = 5.0  # cooldown over: the half-open probe goes through
+        ok = object()
+        assert sup.open_store("t", lambda: ok) is ok
+        assert not sup.breaker("t").open
+        assert sup.status()["t"] == {"failures": 0, "open": False}
+
+    def test_supervisor_fatal_error_skips_retry(self):
+        calls = []
+
+        def bad():
+            calls.append(1)
+            raise ValueError("corrupt beyond repair")
+
+        sup = TenantSupervisor(RetryPolicy(attempts=3, base_delay=0.0,
+                                           sleep=lambda s: None))
+        with pytest.raises(ProtocolError) as ei:
+            sup.open_store("t", bad)
+        assert ei.value.code == "open_failed" and len(calls) == 1

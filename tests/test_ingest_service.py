@@ -1,0 +1,328 @@
+"""End-to-end ingestion daemon tests over real sockets (DESIGN.md §15):
+handshake + resume, multi-tenant soak with bursty interleaving,
+PAUSE/RESUME backpressure, admission control, structured errors, forced
+shutdown recovery, and the ``serve`` CLI verb under SIGTERM."""
+
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core.codec import LogzipConfig
+from repro.core.stream import LZJSReader
+from repro.data.loggen import DATASETS, generate_lines, generate_multitenant
+from repro.ingest import protocol as P
+from repro.ingest.protocol import IngestClient, ProtocolError
+from repro.ingest.service import IngestDaemon
+
+FMT = "<Date> <Time> <Pid> <Level> <Component>: <Content>"
+CFG = LogzipConfig(level=2, kernel="gzip", format=FMT)
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+@pytest.fixture
+def root():
+    # unix socket paths are capped at ~108 bytes: stay out of pytest's
+    # deeply nested tmp_path
+    d = tempfile.mkdtemp(prefix="lzd-", dir="/tmp")
+    try:
+        yield d
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _line(i: int) -> str:
+    return (f"081109 2035{i % 60:02d} {i} INFO dfs.DataNode$PacketResponder: "
+            f"Received block blk_{i * 7 + 1} of size {i * 512}")
+
+
+def _read(path: str) -> list[str]:
+    rd = LZJSReader(path)
+    try:
+        return rd.read_all()
+    finally:
+        rd.close()
+
+
+# ------------------------------------------------------- happy paths --
+def test_single_tenant_roundtrip_unix(root):
+    lines = [_line(i) for i in range(100)]
+    daemon = IngestDaemon(root, cfg=CFG, chunk_lines=32).start()
+    assert daemon.address == os.path.join(root, "ingest.sock")
+    with IngestClient(daemon.address, "t") as c:
+        assert not c.resumed and c.next_seq == 0
+        for ln in lines:
+            c.send(ln)
+        c.wait_ack(99)
+        assert c.flush() == 100
+    daemon.shutdown()
+    assert _read(os.path.join(root, "t.lzjs")) == lines
+
+
+def test_roundtrip_tcp_ephemeral_port(root):
+    daemon = IngestDaemon(root, ("127.0.0.1", 0), cfg=CFG).start()
+    host, port = daemon.address
+    assert port != 0
+    with IngestClient((host, port), "t") as c:
+        c.send("hello over tcp")
+        c.wait_ack(0)
+    daemon.shutdown()
+    assert _read(os.path.join(root, "t.lzjs")) == ["hello over tcp"]
+
+
+def test_restart_resume_exactly_once(root):
+    lines = [_line(i) for i in range(100)]
+    spath = os.path.join(root, "d.sock")
+    d1 = IngestDaemon(root, spath, cfg=CFG, chunk_lines=32).start()
+    with IngestClient(spath, "t") as c:
+        for i in range(60):
+            c.send(lines[i])
+        c.wait_ack(59)
+    d1.shutdown()
+
+    d2 = IngestDaemon(root, spath, cfg=CFG, chunk_lines=32).start()
+    with IngestClient(spath, "t") as c2:
+        # WELCOME carries the resume point: exactly where the acks ended
+        assert c2.resumed and c2.next_seq == 60
+        for i in range(60, 100):
+            c2.send(lines[i])
+        assert c2.flush() == 100
+    d2.shutdown()
+    assert _read(os.path.join(root, "t.lzjs")) == lines
+
+
+def test_zero_line_tenant_over_socket(root):
+    spath = os.path.join(root, "d.sock")
+    d1 = IngestDaemon(root, spath, cfg=CFG).start()
+    IngestClient(spath, "empty").close()  # connect, say nothing, leave
+    d1.shutdown()
+    assert _read(os.path.join(root, "empty.lzjs")) == []
+    d2 = IngestDaemon(root, spath, cfg=CFG).start()
+    with IngestClient(spath, "empty") as c:
+        assert c.resumed and c.next_seq == 0
+    d2.shutdown()
+
+
+# ------------------------------------------------- multi-tenant soak --
+def test_multitenant_soak_bursty(root):
+    tenants = [("alpha", "HDFS"), ("beta", "Spark"), ("gamma", "Windows")]
+    stream = list(generate_multitenant(tenants, 600, seed=7,
+                                       burstiness=0.8, weights=[3, 1, 1]))
+    per = {tid: [ln for t, ln in stream if t == tid] for tid, _ in tenants}
+    assert all(per.values())
+
+    daemon = IngestDaemon(root, cfg=None, chunk_lines=64,
+                          queue_lines=128, batch_lines=16).start()
+    clients = {tid: IngestClient(daemon.address, tid,
+                                 cfg={"format": DATASETS[name]["format"],
+                                      "level": 2})
+               for tid, name in tenants}
+    for tid, ln in stream:  # the interleaved firehose, one daemon
+        clients[tid].send(ln)
+    for tid, _name in tenants:
+        clients[tid].wait_ack(len(per[tid]) - 1, timeout=60)
+        clients[tid].close()
+    daemon.shutdown()
+    for tid, _name in tenants:
+        assert _read(os.path.join(root, tid + ".lzjs")) == per[tid], tid
+
+
+def test_multitenant_generator_deterministic_split():
+    tenants = [("a", "HDFS"), ("b", "Spark")]
+    s1 = list(generate_multitenant(tenants, 200, seed=3, burstiness=0.5))
+    assert s1 == list(generate_multitenant(tenants, 200, seed=3, burstiness=0.5))
+    per_a = [ln for t, ln in s1 if t == "a"]
+    assert 0 < len(per_a) < 200
+    # splitting the interleaved corpus reproduces the single-tenant stream
+    ref = list(generate_lines("HDFS", 200, seed=3 + 104729))
+    assert per_a == ref[:len(per_a)]
+
+
+def test_multitenant_burstiness_lengthens_runs():
+    tenants = [("a", "HDFS"), ("b", "Spark")]
+
+    def switches(stream):
+        tids = [t for t, _ in stream]
+        return sum(1 for x, y in zip(tids, tids[1:]) if x != y)
+
+    smooth = switches(generate_multitenant(tenants, 500, seed=1))
+    bursty = switches(generate_multitenant(tenants, 500, seed=1,
+                                           burstiness=0.9))
+    assert bursty < smooth / 2
+
+
+def test_multitenant_generator_validation():
+    tenants = [("a", "HDFS"), ("b", "Spark")]
+    with pytest.raises(ValueError, match="burstiness"):
+        list(generate_multitenant(tenants, 10, burstiness=1.0))
+    with pytest.raises(ValueError, match="weights"):
+        list(generate_multitenant(tenants, 10, weights=[1.0]))
+    with pytest.raises(ValueError, match="weights"):
+        list(generate_multitenant(tenants, 10, weights=[1.0, 0.0]))
+
+
+# -------------------------------------------------------- backpressure --
+def test_backpressure_pause_then_resume(root):
+    # tiny queue + tiny ack batches: a flood MUST trip the high
+    # watermark, and the worker MUST send RESUME once it drains the
+    # queue even though the (paused) client has gone silent
+    daemon = IngestDaemon(root, cfg=CFG, chunk_lines=4096,
+                          queue_lines=8, batch_lines=2).start()
+    sock = P.connect(daemon.address)
+    P.send_all(sock, P.pack_json(P.T_HELLO, {"tenant": "t"}))
+    ftype, _payload = P.recv_frame(sock)
+    assert ftype == P.T_WELCOME
+    seen: list[int] = []
+    done = threading.Event()
+
+    def reader():
+        try:
+            while True:
+                got = P.recv_frame(sock)
+                if got is None:
+                    return
+                seen.append(got[0])
+                if got[0] == P.T_ACK and P.unpack_u64(got[1]) >= 300:
+                    done.set()
+        except (OSError, ProtocolError):
+            pass
+
+    threading.Thread(target=reader, daemon=True).start()
+    for i in range(300):
+        P.send_all(sock, P.pack_line(i, _line(i)))
+    assert done.wait(60)
+    assert P.T_PAUSE in seen
+    assert P.T_RESUME in seen
+    assert seen.index(P.T_PAUSE) < seen.index(P.T_RESUME)
+    P.send_all(sock, P.pack_frame(P.T_BYE))
+    sock.close()
+    daemon.shutdown()
+    assert _read(os.path.join(root, "t.lzjs")) == [_line(i) for i in range(300)]
+
+
+# -------------------------------------------- admission + error frames --
+def test_admission_cap_and_busy_tenant(root):
+    daemon = IngestDaemon(root, cfg=CFG, max_tenants=1).start()
+    c1 = IngestClient(daemon.address, "t1")
+    with pytest.raises(ProtocolError) as ei:
+        IngestClient(daemon.address, "t1")  # one connection per tenant
+    assert ei.value.code == "busy"
+    with pytest.raises(ProtocolError) as ei:
+        IngestClient(daemon.address, "t2")  # tenant cap reached
+    assert ei.value.code == "admission"
+    c1.close()
+    daemon.shutdown()
+
+
+def test_bad_tenant_and_bad_cfg_rejected(root):
+    daemon = IngestDaemon(root, cfg=CFG).start()
+    with pytest.raises(ProtocolError) as ei:
+        IngestClient(daemon.address, "../escape")
+    assert ei.value.code == "bad_tenant"
+    with pytest.raises(ProtocolError) as ei:
+        IngestClient(daemon.address, "t", cfg={"workers": 8})
+    assert ei.value.code == "bad_cfg"
+    daemon.shutdown()
+
+
+def test_seq_gap_comes_back_as_structured_error(root):
+    daemon = IngestDaemon(root, cfg=CFG).start()
+    sock = P.connect(daemon.address)
+    P.send_all(sock, P.pack_json(P.T_HELLO, {"tenant": "t"}))
+    assert P.recv_frame(sock)[0] == P.T_WELCOME
+    P.send_all(sock, P.pack_line(5, "a gap"))
+    deadline = time.monotonic() + 10
+    err = None
+    while time.monotonic() < deadline:
+        got = P.recv_frame(sock)
+        if got is None:
+            break
+        if got[0] == P.T_ERROR:
+            err = P.unpack_json(got[1])
+            break
+    assert err and err["code"] == "seq_gap" and err["fatal"]
+    sock.close()
+    daemon.shutdown()
+
+
+def test_failed_tenant_can_reconnect_after_retirement(root):
+    daemon = IngestDaemon(root, cfg=CFG).start()
+    with pytest.raises(ProtocolError):
+        with IngestClient(daemon.address, "t") as c:
+            c._sock.sendall(P.pack_line(9, "gap"))  # poison the worker
+            c.wait_ack(9, timeout=10)
+    # the dead worker is retired at the next admission; the tenant's
+    # archive reopens cleanly (crash recovery path)
+    with IngestClient(daemon.address, "t") as c2:
+        assert c2.next_seq == 0
+        c2.send("after the crash")
+        c2.wait_ack(0)
+    daemon.shutdown()
+    assert _read(os.path.join(root, "t.lzjs")) == ["after the crash"]
+
+
+# ---------------------------------------------------- forced shutdown --
+def test_double_shutdown_forces_abort_then_recovers(root):
+    spath = os.path.join(root, "d.sock")
+    lines = [_line(i) for i in range(400)]
+    d1 = IngestDaemon(root, spath, cfg=CFG, chunk_lines=16,
+                      batch_lines=8).start()
+    c = IngestClient(spath, "t")
+    for ln in lines:
+        c.send(ln)
+    # first SIGTERM == graceful drain; the second one mid-drain forces a
+    # crash-equivalent abort — the WAL owns recovery from here
+    threading.Thread(target=d1.shutdown, daemon=True).start()
+    d1.shutdown()
+    assert d1.wait(30)
+    acked = c.acked
+    c.close()
+
+    d2 = IngestDaemon(root, spath, cfg=CFG, chunk_lines=16).start()
+    with IngestClient(spath, "t") as c2:
+        assert c2.next_seq >= acked  # nothing acked was lost
+        assert c2.next_seq <= len(lines)
+        for i in range(c2.next_seq, len(lines)):
+            c2.send(lines[i])
+        c2.wait_ack(len(lines) - 1, timeout=60)
+    d2.shutdown()
+    assert _read(os.path.join(root, "t.lzjs")) == lines
+
+
+# ------------------------------------------------------- serve CLI --
+def test_serve_cli_drains_on_sigterm(root):
+    spath = os.path.join(root, "d.sock")
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.compress", "serve", root,
+         "--socket", spath, "--chunk-lines", "64", "--level", "2"],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    try:
+        deadline = time.monotonic() + 30
+        while not os.path.exists(spath):
+            assert proc.poll() is None, proc.communicate()[1]
+            assert time.monotonic() < deadline, "daemon never bound its socket"
+            time.sleep(0.05)
+        lines = list(generate_lines("HDFS", 120, seed=5))
+        with IngestClient(spath, "t",
+                          cfg={"format": DATASETS["HDFS"]["format"],
+                               "level": 2}) as c:
+            for ln in lines:
+                c.send(ln)
+            c.wait_ack(len(lines) - 1, timeout=60)
+        proc.send_signal(signal.SIGTERM)
+        out, err = proc.communicate(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+    assert proc.returncode == 0, err
+    assert "serving" in out and "drained" in out
+    assert _read(os.path.join(root, "t.lzjs")) == lines
