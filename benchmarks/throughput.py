@@ -417,6 +417,50 @@ def bench_device_pipeline(lines: list[str], fmt: str, n_chunks: int = 20) -> dic
     }
 
 
+def bench_compaction(n_lines: int, dataset: str = "HDFS") -> dict:
+    """Lifecycle compaction (DESIGN.md §16): merge three dup-heavy
+    tenant sessions — same template universe, per-tenant parameter
+    streams — into one sealed archive and measure the win against the
+    summed sealed inputs plus the recompression throughput. Gated by
+    ``check_cr_gate.py``: the compacted archive must be strictly
+    smaller than the inputs it replaced, and fsck-clean."""
+    import tempfile
+
+    from repro.core import recover
+    from repro.core.stream import StreamingCompressor
+    from repro.data.loggen import DATASETS
+    from repro.lifecycle import compact
+
+    fmt = DATASETS[dataset]["format"]
+    per_tenant = max(n_lines // 3, 600)
+    cfg = LogzipConfig(level=3, kernel="gzip", format=fmt, ise=ISE_FAST)
+    with tempfile.TemporaryDirectory() as d:
+        paths = []
+        for i in range(3):
+            p = os.path.join(d, f"tenant{i}.lzjs")
+            with StreamingCompressor(p, cfg,
+                                     chunk_lines=max(500, per_tenant // 8)) as sc:
+                sc.feed(_dup_heavy(dataset, per_tenant, seed=i))
+            paths.append(p)
+        out = os.path.join(d, "merged.lzjs")
+        t0 = time.perf_counter()
+        rep = compact(paths, out)
+        wall = time.perf_counter() - t0
+        fsck_clean = bool(recover.fsck(out)["clean"])
+    return {
+        "n_inputs": len(paths),
+        "n_lines": rep.n_lines,
+        "bytes_in": rep.bytes_in,
+        "bytes_out": rep.bytes_out,
+        "ratio_vs_inputs": round(rep.bytes_in / rep.bytes_out, 3),
+        "templates_in": rep.recluster["templates_in"],
+        "templates_out": rep.recluster["templates_out"],
+        "wall_s": round(wall, 3),
+        "lines_per_sec": round(rep.n_lines / wall, 1),
+        "fsck_clean": fsck_clean,
+    }
+
+
 def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
     from repro.data.loggen import DATASETS
 
@@ -451,6 +495,7 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
         "device_pipeline": device,
         "query": query,
         "datasets": datasets,
+        "compaction": bench_compaction(n_lines, dataset),
     }
     return report
 
@@ -523,6 +568,12 @@ def main() -> None:
         print(f"dataset[{r['dataset']:12s}] CR typed {r['cr_typed']:6.2f} vs "
               f"v1 {r['cr_v1']:6.2f}  (+{r['typed_gain']:.1%})  "
               f"v3 {r['cr_v3']:6.2f} (crc cost {r['v3_overhead']:.2%})")
+    cp = report["compaction"]
+    print(f"compaction: {cp['n_inputs']} sessions ({cp['n_lines']} lines) -> "
+          f"{cp['bytes_in']} -> {cp['bytes_out']} B "
+          f"({cp['ratio_vs_inputs']:.2f}x vs summed inputs)  "
+          f"templates {cp['templates_in']} -> {cp['templates_out']}  "
+          f"{cp['lines_per_sec']:.0f} lines/s  fsck_clean={cp['fsck_clean']}")
     print(f"wrote {out}")
 
 

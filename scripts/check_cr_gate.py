@@ -152,6 +152,26 @@ def main() -> int:
         if not ra["ok"]:
             failures.append(line)
 
+    # lifecycle compaction (ISSUE 9): the compacted archive must be
+    # STRICTLY smaller than the sum of the sealed sessions it replaced
+    # on the dup-heavy multi-tenant corpus — an absolute invariant of
+    # the fresh run (no baseline comparison, no corpus-size slack: the
+    # shared store + max-level recompression must always win), and it
+    # must come out fsck-clean.
+    cp = fresh.get("compaction")
+    if cp is None:
+        failures.append("compaction scenario missing from fresh report")
+    else:
+        line = (f"compaction: {cp['bytes_out']} B < summed inputs "
+                f"{cp['bytes_in']} B ({cp['ratio_vs_inputs']:.2f}x)")
+        checks.append(line)
+        if cp["bytes_out"] >= cp["bytes_in"]:
+            failures.append(line)
+        line = f"compaction output fsck clean: {cp['fsck_clean']}"
+        checks.append(line)
+        if not cp["fsck_clean"]:
+            failures.append(line)
+
     for c in checks:
         print(("FAIL  " if c in failures else "ok    ") + c)
     if failures:

@@ -45,6 +45,11 @@ RUN_MIN_LEN = 8
 # introducing chunk) is cold: bloom-decidable. Ids seen in more chunks
 # are hot — screening them buys little pruning and costs bloom bits.
 COLD_REF_CHUNKS = 1
+# counters saturate here: every decision (insert eligibility at
+# <= COLD_REF_CHUNKS, coldness at <= COLD_REF_CHUNKS + 1) is already
+# settled once a count reaches this bound, so persisted counters lose
+# nothing by capping — the footer meta stays small on hot ids.
+COUNT_CAP = COLD_REF_CHUNKS + 2
 DEFAULT_FPP = 0.02
 # per-chunk byte budget across all of a chunk's blooms (<1% of archive
 # size on the benchmark corpora, CR-gated); the param bloom has priority
@@ -266,10 +271,28 @@ class ScreenBuilder:
     """
 
     def __init__(self, fpp: float = DEFAULT_FPP,
-                 budget: int = SCREEN_CHUNK_BUDGET):
+                 budget: int = SCREEN_CHUNK_BUDGET,
+                 counts: dict[int, int] | None = None):
         self.fpp = float(fpp)
         self.budget = int(budget)
-        self._counts: dict[int, int] = {}
+        self._counts: dict[int, int] = dict(counts) if counts else {}
+
+    @classmethod
+    def restore(cls, meta: dict, *, fpp: float = DEFAULT_FPP,
+                budget: int = SCREEN_CHUNK_BUDGET) -> "ScreenBuilder | None":
+        """Rebuild a builder from a footer ``screens`` entry so an
+        append session keeps emitting sound frames (the counters are the
+        cross-chunk state the frames' soundness depends on). Returns
+        None for archives written before the counters were persisted —
+        those appends must keep dropping screens, as they always did."""
+        if not isinstance(meta, dict) or "c1" not in meta or "hot" not in meta:
+            return None
+        counts = {int(p): COUNT_CAP for p in meta["hot"]}
+        for p in meta.get("cold", []):
+            counts[int(p)] = COLD_REF_CHUNKS + 1
+        for p in meta["c1"]:
+            counts[int(p)] = 1
+        return cls(float(meta.get("fpp", fpp)), budget, counts=counts)
 
     def chunk_refs(self, texts, to_id_get, pd_base: int, pd_end: int
                    ) -> tuple[set[int], set[int]]:
@@ -300,7 +323,7 @@ class ScreenBuilder:
         advance the per-id chunk counters."""
         cold_old = [p for p in old_refs if self._counts.get(p, 0) <= COLD_REF_CHUNKS]
         for p in all_refs:
-            self._counts[p] = self._counts.get(p, 0) + 1
+            self._counts[p] = min(self._counts.get(p, 0) + 1, COUNT_CAP)
 
         spent = 0
         param = None
@@ -338,6 +361,12 @@ class ScreenBuilder:
         return sorted(p for p, c in self._counts.items() if c <= bound)
 
     def meta(self) -> dict:
-        """Footer ``screens`` entry (reader-side protocol constants)."""
+        """Footer ``screens`` entry: reader-side protocol constants plus
+        the saturated reference counters (``c1`` = cold ids still at one
+        chunk, ``hot`` = ids past the cold bound), which ``restore``
+        re-seeds an append session from. Readers ignore the extra keys."""
         return {"r": COLD_REF_CHUNKS, "fpp": self.fpp,
-                "minrun": RUN_MIN_LEN, "cold": self.cold_params()}
+                "minrun": RUN_MIN_LEN, "cold": self.cold_params(),
+                "c1": sorted(p for p, c in self._counts.items() if c == 1),
+                "hot": sorted(p for p, c in self._counts.items()
+                              if c > COLD_REF_CHUNKS + 1)}

@@ -54,7 +54,13 @@ from .codec import _decompress_objects, open_container, read_structured
 from .encode import ParamDict, join_column, split_column, write_varint
 from .integrity import CRC_LEN, IntegrityError
 from .screens import OPT_MAGIC, SCREEN_KIND, ScreenBuilder, parse_screen_payload
-from .stages import LogzipConfig, StreamSession, pack_stage, run_stages
+from .stages import (
+    LogzipConfig,
+    StreamSession,
+    pack_stage,
+    run_stages,
+    serialize_template,
+)
 from .templates import TemplateStore
 from .timing import StageTimer
 
@@ -459,14 +465,17 @@ class StreamingCompressor:
         self._closed = False
         self._summary: dict | None = None
         self._append = bool(append)
+        self._preseed: list[str] = []       # append-store extras for chunk 0
         self._trunc_to: int | None = None   # deferred old-footer overwrite
         self._footer_started = False        # a partial close left footer bytes
         self._tmp_path: str | None = None   # fsync-then-rename target
 
+        screens_meta = None
         if append:
             if not isinstance(out, (str, os.PathLike)):
                 raise ValueError("append=True needs a path")
             rd = LZJSReader(out)
+            screens_meta = rd.footer.get("screens")
             if cfg is None:
                 # continue with the container's own settings — appending
                 # with a different format would silently fragment the store
@@ -482,13 +491,28 @@ class StreamingCompressor:
                 typed_columns=rd.footer.get("typed", v >= 2) if v >= V3 else v >= 2,
                 integrity=v >= V3)
             seed_store = store if store is not None else TemplateStore(rd.templates)
-            if seed_store.templates != rd.templates:
-                # a superset store would make appended chunks reference
-                # templates no delta frame ever serializes — the container
-                # would be permanently unreadable
+            n_known = len(rd.templates)
+            if seed_store.templates[:n_known] != rd.templates:
+                # ids would diverge mid-chain — the container would be
+                # permanently unreadable
                 raise ValueError(
-                    "append store must equal the container's template list "
-                    "(global ids and delta chain must stay consistent)")
+                    "append store must extend the container's template list "
+                    "id-stably (its prefix must equal the container's "
+                    "templates; global ids and delta chain must stay "
+                    "consistent)")
+            # a SUPERSET store is id-stable (the compaction pipeline and
+            # compress_parallel(shared_store=True) seed sessions from a
+            # shared store that other sessions may have grown further):
+            # the extra templates are serialized into the FIRST new
+            # chunk's template delta, keeping every reader's accumulated
+            # count aligned with the recorded bases
+            self._preseed = [serialize_template(list(t))
+                             for t in seed_store.templates[n_known:]]
+            if self._preseed and cfg.level < 2:
+                raise ValueError(
+                    "append store extends the container's template list, "
+                    "but a level-1 container has no template delta chain "
+                    "to carry the extras")
             self.session = StreamSession(seed_store, ParamDict(rd.params))
             self.index = [dict(e) for e in rd.index]
             self.total_lines = rd.n_lines
@@ -518,12 +542,18 @@ class StreamingCompressor:
             raise ValueError("pass the session store via store=, not cfg.template_store")
         self.cfg = cfg
         # per-chunk query screens (DESIGN.md §14) — v3 only (older
-        # sequential readers would misparse the optional frames), and
-        # never on append: the builder's cross-chunk reference counters
-        # cannot be re-seeded soundly from an existing container, so an
-        # appended archive simply drops its (optional) screens meta.
-        self._screens = ScreenBuilder(cfg.screen_fpp) \
-            if (not append and cfg.integrity and cfg.screens) else None
+        # sequential readers would misparse the optional frames). An
+        # append session restores the builder's cross-chunk reference
+        # counters from the footer ``screens`` meta (persisted saturated,
+        # see ``ScreenBuilder.restore``) and keeps emitting sound frames;
+        # archives written before the counters were persisted drop their
+        # (optional) screens meta on append, as they always did.
+        if append:
+            self._screens = ScreenBuilder.restore(screens_meta) \
+                if (cfg.integrity and cfg.screens) else None
+        else:
+            self._screens = ScreenBuilder(cfg.screen_fpp) \
+                if (cfg.integrity and cfg.screens) else None
         if not append:
             self._write_header()
 
@@ -607,6 +637,20 @@ class StreamingCompressor:
             self._pack_and_write(ch, line_start, n_chunk_lines)
 
     def _pack_and_write(self, ch, line_start: int, n_chunk_lines: int) -> None:
+        if self._preseed and ch.session:
+            # first chunk after an append with a superset store: the
+            # extra seed templates ride in THIS chunk's delta frame, so
+            # readers' accumulated template count matches the recorded
+            # bases (delta-chain invariant) without rewriting the header
+            extras = self._preseed
+            self._preseed = []
+            ch.delta_templates = extras + (ch.delta_templates or [])
+            ch.tpl_base -= len(extras)
+            ch.n_delta += len(extras)
+            st = ch.meta.get("stream")
+            if st is not None:
+                st["base"] = ch.tpl_base
+                st["n_delta"] = ch.n_delta
         pack_stage(ch, self.cfg, StageTimer(self.stage_times))
         td = _frame(ch.delta_templates or [])
         pd = _frame(ch.delta_params or [])

@@ -296,6 +296,21 @@ class WalWriter:
         self._seg_path = path
         self._seg_size = _HEADER_LEN
 
+    def journal_bytes(self) -> int:
+        """On-disk size of the journal (sealed segments + the current
+        one). The ingestion daemon's forced-flush trigger keys on this:
+        a tenant that trickles lines below the chunk threshold never
+        fires the archive commit hook, so without a size/age trigger its
+        journal would grow without bound."""
+        with self._lock:
+            total = self._seg_size
+            for path, _last in self._sealed.values():
+                try:
+                    total += os.path.getsize(path)
+                except OSError:
+                    pass
+            return total
+
     # -- garbage collection --------------------------------------------
     def gc(self, watermark: int) -> int:
         """Drop every sealed segment whose records all precede

@@ -28,6 +28,7 @@ import queue
 import shutil
 import socket
 import threading
+import time
 
 from ..core import recover, wal
 from ..core.stages import LogzipConfig
@@ -40,6 +41,14 @@ DEFAULT_BATCH_LINES = 256    # max lines per group-commit fsync
 DEFAULT_MAX_LINE_BYTES = 1 << 20
 PAUSE_HIGH = 0.75            # queue fill ratio that triggers PAUSE
 PAUSE_LOW = 0.25             # ... and the refill ratio that RESUMEs
+# forced flush+trim (WAL GC for trickling tenants): a tenant that never
+# reaches the chunk threshold never fires the archive commit hook, so
+# its journal would grow without bound. When the journal exceeds the
+# byte cap OR uncommitted lines have sat past the age cap, the worker
+# force-cuts a (partial) chunk — the commit advances the watermark and
+# the hook trims covered segments.
+DEFAULT_WAL_FLUSH_BYTES = 4 << 20
+DEFAULT_WAL_FLUSH_AGE = 300.0
 
 _CFG_KEYS = ("level", "kernel", "format")
 
@@ -81,7 +90,9 @@ class TenantStore:
 
     def __init__(self, root: str, tenant: str, cfg: LogzipConfig | None = None,
                  *, chunk_lines: int = 4096, wal_segment_bytes: int = 1 << 20,
-                 wal_opener=open, archive_opener=open):
+                 wal_flush_bytes: int | None = DEFAULT_WAL_FLUSH_BYTES,
+                 wal_flush_age: float | None = DEFAULT_WAL_FLUSH_AGE,
+                 clock=time.monotonic, wal_opener=open, archive_opener=open):
         if not _tenant_ok(tenant):
             raise ProtocolError("bad_tenant", f"invalid tenant id {tenant!r}")
         self.tenant = tenant
@@ -89,6 +100,10 @@ class TenantStore:
         self.wal_dir = self.archive_path + ".wal"
         self.resumed = os.path.exists(self.archive_path)
         self.sealed = False
+        self.wal_flush_bytes = wal_flush_bytes
+        self.wal_flush_age = wal_flush_age
+        self._clock = clock
+        self._last_commit = clock()
         if not self.resumed:
             # bootstrap: publish an EMPTY sealed archive first (tmp +
             # atomic rename inside close()), then run in append mode —
@@ -124,6 +139,7 @@ class TenantStore:
     def _on_commit(self, committed: int) -> None:
         # a CMT1 commit covering line `committed - 1` just fsynced: WAL
         # segments wholly below it are dead weight
+        self._last_commit = self._clock()
         w = getattr(self, "wal", None)
         if w is not None:
             w.gc(committed)
@@ -162,6 +178,27 @@ class TenantStore:
         """Cut + fsync-commit a chunk; returns committed archive lines.
         (``on_commit`` has already GC'd covered WAL segments.)"""
         return self.session.sync()
+
+    def maybe_force_flush(self) -> int | None:
+        """Forced flush+trim for trickling tenants (DESIGN.md §15): when
+        acked-but-uncommitted lines exist AND the journal is over its
+        byte cap (or the oldest uncommitted line is over the age cap),
+        cut a partial chunk now. The commit advances the archive
+        watermark, whose hook GC's every covered journal segment — the
+        journal stays bounded even for a tenant that never fills a
+        chunk. Returns the committed watermark, or None when nothing
+        forced a flush. Crash-safe at every instant: a kill mid-flush
+        leaves WAL records ≥ the last sealed commit, which replay re-feeds
+        exactly (the same recovery path as any other crash)."""
+        if self.sealed or self.wal.durable_seq <= self.session.committed_lines:
+            return None
+        over_size = self.wal_flush_bytes is not None and \
+            self.wal.journal_bytes() > self.wal_flush_bytes
+        over_age = self.wal_flush_age is not None and \
+            self._clock() - self._last_commit >= self.wal_flush_age
+        if not (over_size or over_age):
+            return None
+        return self.flush()
 
     def seal(self) -> None:
         """Graceful close: everything staged becomes durable, the
@@ -212,11 +249,12 @@ class TenantWorker(threading.Thread):
     whichever client is currently attached — acks with no client
     attached are simply dropped, durability does not depend on them."""
 
-    def __init__(self, store: TenantStore, *, on_failure=None,
+    def __init__(self, store: TenantStore, *, on_failure=None, on_seal=None,
                  queue_lines: int = DEFAULT_QUEUE_LINES,
                  batch_lines: int = DEFAULT_BATCH_LINES):
         super().__init__(daemon=True, name=f"ingest-{store.tenant}")
         self.store = store
+        self.on_seal = on_seal        # callable(tenant) | None — retention hook
         self.queue: queue.Queue = queue.Queue(maxsize=queue_lines)
         self.batch_lines = batch_lines
         self.paused = False           # a PAUSE frame is outstanding
@@ -264,6 +302,10 @@ class TenantWorker(threading.Thread):
             try:
                 item = self.queue.get(timeout=0.1)
             except queue.Empty:
+                # idle is exactly when a trickling tenant's journal
+                # would otherwise grow forever — check the forced-flush
+                # triggers here, off the ingest hot path
+                self.store.maybe_force_flush()
                 continue
             batch = 0
             flushes = 0
@@ -290,9 +332,20 @@ class TenantWorker(threading.Thread):
                 self._send(P.pack_u64(P.T_ACK, durable))
             for _ in range(flushes):
                 self._send(P.pack_u64(P.T_FLUSHED, self.store.flush()))
+            if batch and not flushes:
+                # under sustained sub-chunk trickle the queue is never
+                # empty, so the size cap must also be enforced inline
+                self.store.maybe_force_flush()
             self._maybe_resume()
             if draining:
                 self.store.seal()
+                if self.on_seal is not None:
+                    # tenant roll-over: hand the sealed session to the
+                    # retention policy (recompress/rollup — see
+                    # repro.lifecycle). The archive is already sealed
+                    # and durable; a retention failure surfaces as a
+                    # tenant error, never as data loss.
+                    self.on_seal(self.store.tenant)
                 return
 
     def drain(self) -> None:
@@ -319,7 +372,10 @@ class IngestDaemon:
                  batch_lines: int = DEFAULT_BATCH_LINES,
                  max_tenants: int = 64,
                  max_line_bytes: int = DEFAULT_MAX_LINE_BYTES,
-                 wal_segment_bytes: int = 1 << 20, supervisor=None):
+                 wal_segment_bytes: int = 1 << 20,
+                 wal_flush_bytes: int | None = DEFAULT_WAL_FLUSH_BYTES,
+                 wal_flush_age: float | None = DEFAULT_WAL_FLUSH_AGE,
+                 retention=None, supervisor=None):
         from .supervisor import TenantSupervisor
 
         self.root = os.fspath(root)
@@ -331,6 +387,11 @@ class IngestDaemon:
         self.max_tenants = max_tenants
         self.max_line_bytes = max_line_bytes
         self.wal_segment_bytes = wal_segment_bytes
+        self.wal_flush_bytes = wal_flush_bytes
+        self.wal_flush_age = wal_flush_age
+        # lifecycle policy hook (DESIGN.md §16): invoked with the tenant
+        # id after a worker seals its session on drain/roll-over
+        self.retention = retention
         self.supervisor = supervisor or TenantSupervisor()
         self._lock = threading.Lock()
         self._workers: dict[str, TenantWorker] = {}
@@ -493,7 +554,9 @@ class IngestDaemon:
                     tenant, lambda: TenantStore(
                         self.root, tenant, cfg,
                         chunk_lines=self.chunk_lines,
-                        wal_segment_bytes=self.wal_segment_bytes))
+                        wal_segment_bytes=self.wal_segment_bytes,
+                        wal_flush_bytes=self.wal_flush_bytes,
+                        wal_flush_age=self.wal_flush_age))
             except ProtocolError:
                 with self._lock:
                     self._conns.pop(tenant, None)
@@ -503,8 +566,12 @@ class IngestDaemon:
                     self._conns.pop(tenant, None)
                 raise ProtocolError("open_failed",
                                     f"tenant {tenant}: {e}") from e
+            on_seal = None
+            if self.retention is not None:
+                on_seal = self.retention.roll_tenant
             worker = TenantWorker(store,
                                   on_failure=self.supervisor.record_failure,
+                                  on_seal=on_seal,
                                   queue_lines=self.queue_lines,
                                   batch_lines=self.batch_lines)
             with self._lock:

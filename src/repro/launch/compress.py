@@ -424,6 +424,43 @@ def _cmd_repair(args) -> None:
     _format_report(rep, args.json)
 
 
+def _cmd_compact(args) -> None:
+    """Merge N LZJS sessions into one sealed archive (DESIGN.md §16):
+    re-clustered shared template store, fresh ParamDict, max-level
+    recompression. Damaged inputs are salvaged; skipped chunks are
+    reported, never silently dropped (exit 3 when lines were lost and
+    --strict is set)."""
+    import json as _json
+
+    from repro.lifecycle import compact
+
+    rep = compact(args.inputs, args.outfile, level=args.level,
+                  kernel=args.kernel, chunk_lines=args.chunk_lines,
+                  salvage=not args.no_salvage, fold=not args.no_fold,
+                  specialize=not args.no_specialize)
+    d = rep.to_dict()
+    if args.json:
+        print(_json.dumps(d, indent=2))
+    else:
+        rc = d["recluster"]
+        ratio = d["ratio_vs_inputs"]
+        print(f"compacted {len(rep.inputs)} inputs -> {rep.out}: "
+              f"{d['n_lines']} lines, {d['bytes_in']} -> {d['bytes_out']} B"
+              + (f" ({ratio:.2f}x vs summed inputs)" if ratio else ""))
+        print(f"templates: {rc.get('templates_in', 0)} in -> "
+              f"{rc.get('templates_out', 0)} out "
+              f"({rc.get('dead', 0)} dead, {rc.get('folded', 0)} folded, "
+              f"{rc.get('specialized', 0)} specialized)")
+        for s in rep.skipped:
+            print(f"  skipped {s['input']} chunk {s['chunk']}: "
+                  f"lines [{s['line_start']}, "
+                  f"{s['line_start'] + s['n_lines']}): {s['why']}")
+        if rep.lost_lines:
+            print(f"lost {rep.lost_lines} lines to damaged input chunks")
+    if rep.lost_lines and args.strict:
+        sys.exit(3)
+
+
 def _cmd_serve(args) -> None:
     """Run the multi-tenant ingestion daemon (DESIGN.md §15) until
     SIGTERM/SIGINT. First signal = graceful drain (stop admitting,
@@ -437,11 +474,18 @@ def _cmd_serve(args) -> None:
 
     cfg = LogzipConfig(level=args.level, kernel=args.kernel,
                        format=args.format) if args.format else None
+    retention = None
+    if args.retention:
+        from repro.lifecycle import RetentionManager, RetentionPolicy
+
+        retention = RetentionManager(
+            args.root, RetentionPolicy(rollup_after=args.rollup_after))
     address = (args.host, args.port) if args.port is not None else args.socket
     daemon = IngestDaemon(args.root, address, cfg=cfg,
                           chunk_lines=args.chunk_lines,
                           queue_lines=args.queue_lines,
-                          max_tenants=args.max_tenants).start()
+                          max_tenants=args.max_tenants,
+                          retention=retention).start()
     print(f"serving {args.root} on {daemon.address}", flush=True)
 
     def _term(signum, frame):
@@ -630,13 +674,42 @@ def main():
     sv.add_argument("--queue-lines", type=int, default=1024,
                     help="bounded per-tenant queue (backpressure above it)")
     sv.add_argument("--max-tenants", type=int, default=64)
+    sv.add_argument("--retention", action="store_true",
+                    help="run the tiered retention policy on tenant "
+                         "roll-over (hot -> sealed -> rollup)")
+    sv.add_argument("--rollup-after", type=int, default=4,
+                    help="sealed segments per rollup window (with "
+                         "--retention; default 4)")
+    cp = sub.add_parser("compact", help="merge N LZJS sessions into one "
+                                        "sealed archive (re-clustered shared "
+                                        "store, max-level recompression; "
+                                        "salvages damaged inputs)")
+    cp.add_argument("outfile")
+    cp.add_argument("inputs", nargs="+", help="input .lzjs sessions "
+                                              "(may be damaged/repaired)")
+    cp.add_argument("--level", type=int, default=3)
+    cp.add_argument("--kernel", default="lzma",
+                    choices=["gzip", "bzip2", "lzma"])
+    cp.add_argument("--chunk-lines", type=int, default=16384)
+    cp.add_argument("--no-salvage", action="store_true",
+                    help="fail on damaged inputs instead of skipping "
+                         "and reporting their chunks")
+    cp.add_argument("--no-fold", action="store_true",
+                    help="disable cross-session near-duplicate template "
+                         "folding")
+    cp.add_argument("--no-specialize", action="store_true",
+                    help="disable constant-star template specialization")
+    cp.add_argument("--strict", action="store_true",
+                    help="exit 3 when any input lines were lost")
+    cp.add_argument("--json", action="store_true", help="report as JSON")
     args = ap.parse_args()
 
     try:
         {"pack": _cmd_pack, "stream": _cmd_stream, "unpack": _cmd_unpack,
          "inspect": _cmd_inspect, "grep": _cmd_grep, "agg": _cmd_agg,
          "extract": _cmd_extract, "serve": _cmd_serve,
-         "fsck": _cmd_fsck, "repair": _cmd_repair}[args.cmd](args)
+         "fsck": _cmd_fsck, "repair": _cmd_repair,
+         "compact": _cmd_compact}[args.cmd](args)
     except BrokenPipeError:
         raise  # handled by the __main__ guard (exit 0, not an error)
     except (OSError, ValueError) as e:

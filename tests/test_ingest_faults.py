@@ -11,6 +11,7 @@ point is deterministic.
 """
 
 import os
+import time
 
 import pytest
 
@@ -469,3 +470,111 @@ class TestRetryAndBreaker:
         with pytest.raises(ProtocolError) as ei:
             sup.open_store("t", bad)
         assert ei.value.code == "open_failed" and len(calls) == 1
+
+
+# ------------------------------------------------- forced WAL flush --
+class TestForcedWalFlush:
+    """Size/age-triggered flush+trim for trickling tenants: a tenant
+    that never fills a chunk must not grow its journal forever just
+    because the commit hook (the normal GC path) never fires."""
+
+    def test_size_trigger_bounds_trickling_journal(self, tmp_path):
+        lines = _lines(120)
+        st = TenantStore(str(tmp_path), "t", CFG, chunk_lines=100_000,
+                         wal_segment_bytes=512, wal_flush_bytes=2048,
+                         wal_flush_age=None)
+        peak = 0
+        for i, line in enumerate(lines):
+            st.submit(i, line)
+            st.ack_sync()  # trickle: one fsynced record per batch
+            st.maybe_force_flush()
+            peak = max(peak, st.wal.journal_bytes())
+        # bound: the cap itself + one segment of slack (the active
+        # segment is never trimmed) — NOT proportional to lines sent
+        assert peak <= 2048 + 512 + 256, f"journal peaked at {peak} B"
+        assert st.session.committed_lines > 0  # forced flushes actually fired
+        st.seal()
+        assert _read(st.archive_path) == lines
+
+    def test_no_trigger_below_thresholds(self, tmp_path):
+        st = TenantStore(str(tmp_path), "t", CFG, chunk_lines=100_000,
+                         wal_flush_bytes=1 << 20, wal_flush_age=None)
+        for i in range(5):
+            st.submit(i, _line(i))
+        st.ack_sync()
+        assert st.maybe_force_flush() is None  # journal tiny: no forced cut
+        assert st.session.committed_lines == 0
+
+    def test_age_trigger_uses_injected_clock(self, tmp_path):
+        now = [0.0]
+        st = TenantStore(str(tmp_path), "t", CFG, chunk_lines=100_000,
+                         wal_flush_bytes=None, wal_flush_age=300.0,
+                         clock=lambda: now[0])
+        for i in range(3):
+            st.submit(i, _line(i))
+        st.ack_sync()
+        assert st.maybe_force_flush() is None  # young: nothing to do
+        now[0] = 301.0
+        assert st.maybe_force_flush() == 3  # idle past the cap: cut now
+        assert st.wal.journal_bytes() <= st.wal._seg_size  # sealed segs GC'd
+        now[0] = 700.0
+        assert st.maybe_force_flush() is None  # nothing uncommitted left
+        st.seal()
+        assert _read(st.archive_path) == _lines(3)
+
+    def test_kill_mid_forced_flush_replays_exact(self, tmp_path):
+        # the forced flush's chunk write tears (ENOSPC/kill mid-write):
+        # every acked line must replay from the journal on reopen — the
+        # trim must never run ahead of the commit it is keyed on
+        root = str(tmp_path)
+        lines = _lines(40)
+        arch_op = FaultyOpener()
+        st = TenantStore(root, "t", CFG, chunk_lines=100_000,
+                         wal_segment_bytes=256, wal_flush_bytes=512,
+                         wal_flush_age=None, archive_opener=arch_op)
+        arch_op.write_limit = arch_op.bytes_written + 300
+        acked = 0
+        try:
+            for i, line in enumerate(lines):
+                st.submit(i, line)
+                acked = st.ack_sync()
+                st.maybe_force_flush()
+        except OSError:
+            pass
+        assert arch_op.faults > 0  # the forced flush did tear mid-write
+        assert acked > 0
+        st.crash()
+        st2 = TenantStore(root, "t", CFG, chunk_lines=100_000)
+        assert st2.resumed
+        assert st2.next_seq == acked  # crash-exact resume point
+        for i in range(st2.next_seq, len(lines)):
+            st2.submit(i, lines[i])
+        st2.seal()
+        assert _read(st2.archive_path) == lines
+
+    def test_worker_idle_loop_runs_forced_flush(self, tmp_path):
+        # integration: the idle branch of the worker loop is the only
+        # place a trickling tenant's triggers get checked
+        now = [0.0]
+        st = TenantStore(str(tmp_path), "t", CFG, chunk_lines=100_000,
+                         wal_flush_bytes=None, wal_flush_age=60.0,
+                         clock=lambda: now[0])
+        w = TenantWorker(st)
+        w.start()
+        try:
+            for i in range(4):
+                w.queue.put(("line", i, _line(i)))
+            deadline = time.time() + 5.0
+            while st.wal.durable_seq < 4 and time.time() < deadline:
+                time.sleep(0.01)
+            assert st.wal.durable_seq == 4
+            assert st.session.committed_lines == 0
+            now[0] = 61.0  # tenant goes idle past the age cap
+            deadline = time.time() + 5.0
+            while st.session.committed_lines < 4 and time.time() < deadline:
+                time.sleep(0.01)
+            assert st.session.committed_lines == 4
+        finally:
+            w.queue.put(None)
+            w.done.wait(5.0)
+        assert _read(st.archive_path) == _lines(4)

@@ -13,6 +13,8 @@ import random
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hyp_st
 
 from repro.core import query as q
 from repro.core import recover, screens
@@ -463,3 +465,92 @@ def test_distinct_counts_default_weights():
     inv = np.array([0, 2, 2, 1, -1, 2], dtype=np.int32)
     got = ops.distinct_counts(inv, 3)
     assert got.tolist() == [1, 1, 3]
+
+
+# ------------------------------------------- append-boundary screens
+
+def _mk_at(path, lines, append=False, chunk_lines=500, **cfg_kw):
+    cfg = None if append else LogzipConfig(format=FMT, level=3, **cfg_kw)
+    with StreamingCompressor(str(path), cfg, chunk_lines=chunk_lines,
+                             append=append) as sc:
+        sc.feed(lines)
+
+
+def test_append_session_keeps_emitting_screens(tmp_path, corpus):
+    """Reopened sessions must keep writing SCRN frames: the builder's
+    cross-chunk reference counters are persisted in the footer screens
+    meta and restored on append."""
+    p = tmp_path / "a.lzjs"
+    _mk_at(p, corpus[:2000])
+    _mk_at(p, corpus[2000:], append=True)
+    rd = LZJSReader(str(p))
+    assert len(rd) >= 8
+    missing = [k for k, e in enumerate(rd.index) if not e.get("sc")]
+    assert not missing, f"chunks {missing} lost their SCRN frames"
+    meta = rd.footer.get("screens")
+    assert meta and "c1" in meta and "hot" in meta
+    rd.close()
+
+
+def test_append_boundary_counters_match_single_session(tmp_path, corpus):
+    """Splitting one corpus across an append boundary (same chunk
+    geometry) must leave the persisted reference counters identical to
+    a never-restarted session's: restore() loses nothing a screening
+    decision depends on."""
+    p = tmp_path / "a.lzjs"
+    _mk_at(p, corpus[:2000])
+    _mk_at(p, corpus[2000:], append=True)
+    single = _mk(corpus)
+    ma = LZJSReader(str(p)).footer["screens"]
+    ms = LZJSReader(io.BytesIO(single)).footer["screens"]
+    for key in ("cold", "c1", "hot"):
+        assert ma[key] == ms[key], f"screens meta {key!r} diverged"
+
+
+def test_screened_equals_unscreened_across_append_boundary(tmp_path, corpus):
+    p = tmp_path / "a.lzjs"
+    _mk_at(p, corpus[:2000])
+    _mk_at(p, corpus[2000:], append=True)
+    blob = open(p, "rb").read()
+    un = _mk(corpus, screens=False)
+    for s in NEEDLES:
+        st1, st2 = q.QueryStats(), q.QueryStats()
+        h1 = list(q.search(blob, q.Substring(s), stats=st1))
+        h2 = list(q.search(un, q.Substring(s), stats=st2))
+        truth = [(i, l) for i, l in enumerate(corpus) if s in l]
+        assert h1 == truth, f"appended screened archive wrong for {s!r}"
+        assert h2 == truth
+        assert st1.chunks_opened <= st2.chunks_opened
+
+
+@settings(max_examples=6, deadline=None)
+@given(hyp_st.integers(min_value=1, max_value=1199),
+       hyp_st.integers(min_value=0, max_value=1199))
+def test_append_boundary_screens_property(split, probe):
+    """Property: for ANY split point, the screened append archive
+    answers point queries exactly like ground truth — params introduced
+    before the boundary and re-referenced after it (cold cross-chunk
+    refs) are never lost to a stale screen."""
+    lines = [f"081109 2035{i % 60:02d} {i % 7} INFO "
+             f"dfs.DataNode$PacketResponder: PacketResponder {i % 3} for "
+             f"block blk_{5000000 + (i % 37)} terminating"
+             if i % 4 else
+             f"081109 2035{i % 60:02d} {i % 7} INFO dfs.DataNode$DataXceiver: "
+             f"Receiving block blk_{9000000 + i} src /10.0.{i % 5}.{i % 9} "
+             f"dest /10.1.{i % 5}.{i % 9}"
+             for i in range(1200)]
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        p = f"{d}/a.lzjs"
+        _mk_at(p, lines[:split], chunk_lines=100)
+        _mk_at(p, lines[split:], append=True, chunk_lines=100)
+        blob = open(p, "rb").read()
+    assert decompress_lzjs(blob) == lines
+    needles = [f"blk_{9000000 + probe}",        # unique id at the probe line
+               f"blk_{5000000 + (probe % 37)}",  # hot id recurring on both sides
+               "blk_123456789"]                  # absent id of indexed shape
+    for s in needles:
+        hits = list(q.search(blob, q.Substring(s)))
+        assert hits == [(i, l) for i, l in enumerate(lines) if s in l], \
+            f"split={split}: wrong hits for {s!r}"

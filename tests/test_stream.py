@@ -182,18 +182,64 @@ def test_append_inherits_container_config(tmp_path, spark_lines):
     rd.close()
 
 
-def test_append_rejects_superset_store(tmp_path, spark_lines):
-    """A store that grew beyond the container's templates must be refused:
-    the extra templates would be serialized in no delta frame, leaving
-    the appended container permanently unreadable."""
+def test_append_accepts_superset_store_id_stably(tmp_path, spark_lines):
+    """A store that grew BEYOND the container's templates (id-stable
+    prefix) is legal append input: the extra templates ride the first
+    new chunk's delta frame, so every reader's accumulated count stays
+    aligned with the recorded bases and the grown store's global ids
+    keep meaning the same templates."""
     cfg = LogzipConfig(level=3, format=DATASETS["Spark"]["format"], ise=CFG_FAST)
     path = str(tmp_path / "s.lzjs")
     with StreamingCompressor(path, cfg, chunk_lines=300) as sc:
         sc.feed(spark_lines[:600])
+    base = LZJSReader(path).templates
+    grown = TemplateStore(base)
+    extra_id = grown.add(("extra", None, "template"))
+    assert extra_id == len(base)
+    with StreamingCompressor(path, cfg, chunk_lines=300, append=True,
+                             store=grown) as sc:
+        sc.feed(spark_lines[600:900])
+    rd = LZJSReader(path)
+    assert rd.templates[:len(base)] == base
+    assert rd.templates[extra_id] == ("extra", None, "template")
+    assert rd.read_all() == spark_lines[:900]
+    # the preseeded extra is part of the first appended chunk's delta:
+    # the recorded chain stays contiguous
+    assert rd.index[-1]["tpl_base"] + rd.index[-1]["n_delta"] == len(rd.templates)
+    rd.close()
+
+
+def test_append_superset_store_empty_session_keeps_container(tmp_path,
+                                                            spark_lines):
+    """Opening with a superset store but feeding nothing must leave the
+    container byte-identical: the extras only materialize in a chunk
+    delta, and no chunk was written."""
+    cfg = LogzipConfig(level=3, format=DATASETS["Spark"]["format"], ise=CFG_FAST)
+    path = str(tmp_path / "s.lzjs")
+    with StreamingCompressor(path, cfg, chunk_lines=300) as sc:
+        sc.feed(spark_lines[:600])
+    before = open(path, "rb").read()
     grown = TemplateStore(LZJSReader(path).templates)
     grown.add(("extra", None, "template"))
+    with StreamingCompressor(path, cfg, chunk_lines=300, append=True,
+                             store=grown):
+        pass
+    assert open(path, "rb").read() == before
+
+
+def test_append_rejects_divergent_store(tmp_path, spark_lines):
+    """A store whose PREFIX disagrees with the container's templates is
+    still refused: ids would diverge mid-chain and the container would
+    be permanently unreadable."""
+    cfg = LogzipConfig(level=3, format=DATASETS["Spark"]["format"], ise=CFG_FAST)
+    path = str(tmp_path / "s.lzjs")
+    with StreamingCompressor(path, cfg, chunk_lines=300) as sc:
+        sc.feed(spark_lines[:600])
+    divergent = TemplateStore([("not", "the", "container", None)]
+                              + LZJSReader(path).templates[1:])
     with pytest.raises(ValueError, match="append store"):
-        StreamingCompressor(path, cfg, chunk_lines=300, append=True, store=grown)
+        StreamingCompressor(path, cfg, chunk_lines=300, append=True,
+                            store=divergent)
     # the refused open must not have corrupted the container
     assert LZJSReader(path).read_all() == spark_lines[:600]
 
