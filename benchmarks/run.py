@@ -1,14 +1,35 @@
 """Benchmark driver — one section per paper table/figure + ours.
 
-PYTHONPATH=src python -m benchmarks.run [--lines N] [--quick]
+PYTHONPATH=src python -m benchmarks.run [--lines N] [--quick] \\
+    [--scenarios NAME ...]
 Emits CSV-ish sections; EXPERIMENTS.md embeds the output.
+
+``--scenarios`` selects a subset (unknown names exit 2 with the
+available list). The tracked BENCH artifact is only written when the
+full throughput family runs — a partial report must never clobber the
+trajectory the perf gate diffs against.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import sys
 import time
+
+# every --scenarios name, in emission order; "soak" is opt-in (it
+# streams tens of MB through a live session — minutes, not seconds)
+SCENARIOS = ("throughput", "streaming", "query", "datasets", "table2",
+             "fig6", "fig7", "match_rate", "kernels", "soak")
+DEFAULT_SCENARIOS = tuple(s for s in SCENARIOS if s != "soak")
+
+# scenarios backed by throughput.run() -> the report parts they need
+_THROUGHPUT_PARTS = {
+    "throughput": {"nodedup", "dupheavy", "device", "compaction"},
+    "streaming": {"streaming"},
+    "query": {"query"},
+    "datasets": {"datasets"},
+}
 
 
 def _emit(title: str, rows: list) -> None:
@@ -26,43 +47,81 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--lines", type=int, default=40000)
     ap.add_argument("--quick", action="store_true", help="tiny sizes (CI)")
+    ap.add_argument("--scenarios", nargs="+", metavar="NAME", default=None,
+                    help=f"subset to run; available: {', '.join(SCENARIOS)}")
     args = ap.parse_args()
     n = 4000 if args.quick else args.lines
+
+    sel = list(DEFAULT_SCENARIOS) if args.scenarios is None else \
+        [s for tok in args.scenarios for s in tok.split(",") if s]
+    unknown = [s for s in sel if s not in SCENARIOS]
+    if unknown:
+        print(f"unknown scenario(s): {', '.join(unknown)}", file=sys.stderr)
+        print(f"available: {', '.join(SCENARIOS)}", file=sys.stderr)
+        sys.exit(2)
+    sel_set = set(sel)
 
     from benchmarks import compression, kernel_bench, throughput
 
     t0 = time.time()
-    report = throughput.run(n)
-    # quick runs must not clobber the tracked 40k-line perf-trajectory
-    # artifact; they get their own file (CI uploads BENCH_compress*.json)
-    throughput.write_report(
-        report, path=None if n >= 40000 else
-        throughput.DEFAULT_REPORT_PATH.replace(".json", ".quick.json"))
-    _emit("Compress throughput (BENCH_compress.json; per-stage breakdown in the file)",
-          [{k: r[k] for k in ("label", "lines_per_sec", "mb_per_sec", "compression_ratio")}
-           for r in report["results"]])
-    s = report["streaming"]
-    _emit("Streaming session (shared-store chunked vs independent vs single)",
-          [{k: s[k] for k in ("chunk_lines", "cr_single", "cr_chunked", "cr_streaming",
-                              "cr_gap_closed", "streaming_lines_per_sec",
-                              "throughput_vs_chunked")}])
-    _emit("Compressed-domain query (template pushdown vs decompress-then-grep)",
-          [{k: r[k] for k in ("query", "hits", "hits_agree", "wall_s",
-                              "fraction_chunks_decoded", "speedup_vs_baseline")}
-           for r in report["query"]["queries"]])
-    _emit("Per-dataset CR — typed column codecs (v2) vs text layout (v1)",
-          [{k: r[k] for k in ("dataset", "cr_typed", "cr_v1", "typed_gain")}
-           for r in report["datasets"]["rows"]])
-    _emit("Table II — compression ratio (synthetic corpora; orderings are the target)",
-          compression.table2(n))
-    _emit("Fig 6 — compressed MB by logzip level (gzip kernel)",
-          compression.fig6_levels(n))
-    _emit("Fig 7 — workers / chunking (1-core container: ideal_wall_s = cpu/w)",
-          compression.fig7_workers(n))
-    _emit("Sec V-D — ISE match rate from ~1% sample",
-          compression.match_rate(n if args.quick else max(n, 20000)))
-    _emit("Kernel throughput (CPU interpret — relative only)",
-          kernel_bench.run(4000 if args.quick else 20000))
+    tp_scenarios = sel_set & set(_THROUGHPUT_PARTS)
+    if tp_scenarios:
+        full = tp_scenarios == set(_THROUGHPUT_PARTS)
+        parts = None if full else \
+            set().union(*(_THROUGHPUT_PARTS[s] for s in tp_scenarios))
+        report = throughput.run(n, parts=parts)
+        if full:
+            # quick runs must not clobber the tracked 40k-line perf-
+            # trajectory artifact; they get their own file (CI uploads
+            # BENCH_compress*.json). Partial reports are never written.
+            throughput.write_report(
+                report, path=None if n >= 40000 else
+                throughput.DEFAULT_REPORT_PATH.replace(".json", ".quick.json"))
+    if "throughput" in sel_set:
+        _emit("Compress throughput (BENCH_compress.json; per-stage breakdown in the file)",
+              [{k: r[k] for k in ("label", "lines_per_sec", "mb_per_sec", "compression_ratio")}
+               for r in report["results"]])
+    if "streaming" in sel_set:
+        s = report["streaming"]
+        _emit("Streaming session (shared-store chunked vs independent vs single)",
+              [{k: s[k] for k in ("chunk_lines", "cr_single", "cr_chunked", "cr_streaming",
+                                  "cr_gap_closed", "streaming_lines_per_sec",
+                                  "throughput_vs_chunked")}])
+    if "query" in sel_set:
+        _emit("Compressed-domain query (template pushdown vs decompress-then-grep)",
+              [{k: r[k] for k in ("query", "hits", "hits_agree", "wall_s",
+                                  "fraction_chunks_decoded", "speedup_vs_baseline")}
+               for r in report["query"]["queries"]])
+    if "datasets" in sel_set:
+        _emit("Per-dataset CR — typed column codecs (v2) vs text layout (v1)",
+              [{k: r[k] for k in ("dataset", "cr_typed", "cr_v1", "typed_gain")}
+               for r in report["datasets"]["rows"]])
+    if "table2" in sel_set:
+        _emit("Table II — compression ratio (synthetic corpora; orderings are the target)",
+              compression.table2(n))
+    if "fig6" in sel_set:
+        _emit("Fig 6 — compressed MB by logzip level (gzip kernel)",
+              compression.fig6_levels(n))
+    if "fig7" in sel_set:
+        _emit("Fig 7 — workers / chunking (1-core container: ideal_wall_s = cpu/w)",
+              compression.fig7_workers(n))
+    if "match_rate" in sel_set:
+        _emit("Sec V-D — ISE match rate from ~1% sample",
+              compression.match_rate(n if args.quick else max(n, 20000)))
+    if "kernels" in sel_set:
+        _emit("Kernel throughput (CPU interpret — relative only)",
+              kernel_bench.run(4000 if args.quick else 20000))
+    if "soak" in sel_set:
+        from benchmarks import soak
+
+        rep = soak.run(int((5 if args.quick else 20) * 1e6))
+        r = rep["runs"]["stream"]
+        _emit("Soak (stream; full harness: benchmarks/soak.py -> BENCH_soak.json)",
+              [{"n_lines": r["n_lines"], "mb_per_sec": r["mb_per_sec"],
+                "compression_ratio": r["compression_ratio"],
+                "latency_p99_ms": r["latency_ms"]["p99"],
+                "rss_peak_mb": r["rss_mb"]["peak"],
+                "templates_final": r["growth"]["templates_final"]}])
 
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
     if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):

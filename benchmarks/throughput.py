@@ -461,28 +461,46 @@ def bench_compaction(n_lines: int, dataset: str = "HDFS") -> dict:
     }
 
 
-def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
+ALL_PARTS = ("nodedup", "dupheavy", "streaming", "device", "query",
+             "datasets", "compaction")
+
+
+def run(n_lines: int = 40000, dataset: str = "HDFS", parts=None) -> dict:
+    """Full report, or a subset: ``parts`` names the optional sections
+    (``ALL_PARTS``; the "main" scenario always runs — streaming needs its
+    CR as the baseline). Skipped sections are ``None`` in the report —
+    only write a *full* run to the tracked BENCH artifact."""
     from repro.data.loggen import DATASETS
+
+    sel = set(ALL_PARTS) if parts is None else set(parts)
+    unknown = sel - set(ALL_PARTS)
+    if unknown:
+        raise ValueError(f"unknown part(s) {sorted(unknown)}; "
+                         f"available: {list(ALL_PARTS)}")
 
     fmt = DATASETS[dataset]["format"]
     cfg = LogzipConfig(level=3, kernel="gzip", format=fmt, ise=ISE_FAST)
     cfg_nodedup = LogzipConfig(level=3, kernel="gzip", format=fmt, ise=ISE_FAST, dedup=False)
 
     lines = list(generate_lines(dataset, n_lines, seed=0))
-    results = [
-        bench_one(lines, cfg, f"{dataset}-{n_lines}", scenario="main"),
-        bench_one(lines, cfg_nodedup, f"{dataset}-{n_lines}-nodedup", scenario="nodedup"),
-        bench_one(_dup_heavy(dataset, n_lines), cfg, f"{dataset}-{n_lines}-dupheavy",
-                  scenario="dupheavy"),
-    ]
+    results = [bench_one(lines, cfg, f"{dataset}-{n_lines}", scenario="main")]
+    if "nodedup" in sel:
+        results.append(bench_one(lines, cfg_nodedup, f"{dataset}-{n_lines}-nodedup",
+                                 scenario="nodedup"))
+    if "dupheavy" in sel:
+        results.append(bench_one(_dup_heavy(dataset, n_lines), cfg,
+                                 f"{dataset}-{n_lines}-dupheavy",
+                                 scenario="dupheavy"))
     fast = results[0]
     streaming = bench_streaming(lines, cfg, fast["compression_ratio"],
-                                chunk_lines=max(500, n_lines // 20))
+                                chunk_lines=max(500, n_lines // 20)) \
+        if "streaming" in sel else None
     # interpret-mode kernels are slow on CPU: a small slice exercises the
     # bucketed jit cache without dominating the benchmark wall clock
-    device = bench_device_pipeline(lines[: min(n_lines, 4000)], fmt)
-    query = bench_query(lines, cfg, chunk_lines=max(500, n_lines // 20))
-    datasets = bench_datasets()
+    device = bench_device_pipeline(lines[: min(n_lines, 4000)], fmt) \
+        if "device" in sel else None
+    query = bench_query(lines, cfg, chunk_lines=max(500, n_lines // 20)) \
+        if "query" in sel else None
     report = {
         "benchmark": "compress_throughput",
         "host": {"platform": platform.platform(), "python": platform.python_version()},
@@ -494,8 +512,9 @@ def run(n_lines: int = 40000, dataset: str = "HDFS") -> dict:
         "streaming": streaming,
         "device_pipeline": device,
         "query": query,
-        "datasets": datasets,
-        "compaction": bench_compaction(n_lines, dataset),
+        "datasets": bench_datasets() if "datasets" in sel else None,
+        "compaction": bench_compaction(n_lines, dataset)
+        if "compaction" in sel else None,
     }
     return report
 

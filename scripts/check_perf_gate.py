@@ -109,7 +109,15 @@ def main() -> int:
             failures.append(line)
         # benchmark honesty: annotate interpret-mode numbers so they are
         # not mistaken for accelerator performance; --require-compiled
-        # escalates the annotation to a failure
+        # escalates the annotation to a failure. Under GitHub Actions the
+        # ``::warning`` line becomes a run-summary annotation (visible on
+        # every nightly without opening the markdown table); elsewhere it
+        # is just a printed line.
+        if dp.get("interpret_mode"):
+            print("::warning title=Pallas interpret mode::device_pipeline "
+                  "numbers were measured with INTERPRET=1 "
+                  f"(backends: {dp.get('backends', {})}) — relative cost "
+                  "only, not accelerator performance")
         if args.require_compiled:
             line = (f"device_pipeline compiled (interpret_mode="
                     f"{bool(dp.get('interpret_mode'))}, required compiled)")

@@ -443,11 +443,17 @@ class StreamingCompressor:
                  chunk_lines: int = 8192, chunk_bytes: int = 8 << 20,
                  store: TemplateStore | None = None, append: bool = False,
                  stage_times: dict | None = None, pipeline: bool = True,
-                 sync_on_commit: bool = False, on_commit=None, opener=open):
+                 sync_on_commit: bool = False, on_commit=None,
+                 on_chunk=None, opener=open):
         self.chunk_lines = int(chunk_lines)
         self.chunk_bytes = int(chunk_bytes)
         self.stage_times = stage_times
         self.pipeline = bool(pipeline)
+        # observability hook (soak harness): ``on_chunk(index_entry)``
+        # fires after each chunk record lands, on the writing thread
+        # (the pack worker under pipeline=True) — keep it cheap and
+        # thread-safe, and treat the entry as read-only.
+        self.on_chunk = on_chunk
         # durability hooks (DESIGN.md §15): sync_on_commit fsyncs each
         # chunk record as it lands, advancing ``committed_lines`` — the
         # fsync-durable line watermark the ingestion daemon's WAL GC and
@@ -560,6 +566,26 @@ class StreamingCompressor:
     @property
     def store(self) -> TemplateStore:
         return self.session.store
+
+    @property
+    def bytes_written(self) -> int:
+        """Container bytes written so far (header + landed chunk records;
+        excludes buffered lines and any in-flight pack job)."""
+        return self._pos
+
+    def stats(self) -> dict:
+        """Cheap observability snapshot for the soak harness / daemon
+        stats endpoints — no locks taken, values may lag one in-flight
+        chunk under ``pipeline=True``."""
+        return {
+            "total_lines": self.total_lines,
+            "committed_lines": self.committed_lines,
+            "n_chunks": len(self.index),
+            "bytes_written": self._pos,
+            "buffered_lines": len(self._buf),
+            "n_templates": len(self.session.store.templates),
+            "n_params": len(self.session.paradict.values),
+        }
 
     @property
     def _version(self) -> int:
@@ -726,6 +752,8 @@ class StreamingCompressor:
             entry["sc"] = sc_entry
         self.index.append(entry)
         self._pos += len(rec)
+        if self.on_chunk is not None:
+            self.on_chunk(entry)
 
     def _drain(self) -> None:
         """Wait for in-flight pack/write jobs (re-raising any error)."""

@@ -1,3 +1,21 @@
 """Data plane: synthetic loghub-style corpora + logzip-shard pipeline."""
 
-from .loggen import DATASETS, generate_lines, write_dataset
+from .loggen import (
+    DATASETS,
+    WorkloadSpec,
+    generate_lines,
+    generate_multitenant,
+    generate_workload,
+    generate_workload_multitenant,
+    write_dataset,
+)
+
+__all__ = [
+    "DATASETS",
+    "WorkloadSpec",
+    "generate_lines",
+    "generate_multitenant",
+    "generate_workload",
+    "generate_workload_multitenant",
+    "write_dataset",
+]

@@ -18,9 +18,21 @@ reproduction targets.
 
 from __future__ import annotations
 
+import dataclasses
+import re
+import zlib
+
 import numpy as np
 
-__all__ = ["DATASETS", "generate_lines", "generate_multitenant", "write_dataset"]
+__all__ = [
+    "DATASETS",
+    "WorkloadSpec",
+    "generate_lines",
+    "generate_multitenant",
+    "generate_workload",
+    "generate_workload_multitenant",
+    "write_dataset",
+]
 
 
 def _zipf_weights(n: int, s: float = 1.2) -> np.ndarray:
@@ -271,6 +283,29 @@ def generate_lines(name: str, n_lines: int, seed: int = 0, anomaly_rate: float =
         yield line.replace("<Content>", content, 1)
 
 
+def _interleave(ids, gens, n_lines: int, seed: int, burstiness: float, weights):
+    """Markov-bursty weighted interleaving of per-tenant line iterators.
+
+    After emitting for tenant ``t``, the next line comes from ``t``
+    again with probability ``burstiness + (1 - burstiness) * w[t]`` — 0
+    gives pure weighted interleaving, values near 1 give long
+    single-tenant runs (the firehose pattern backpressure tests want).
+    """
+    if not 0.0 <= burstiness < 1.0:
+        raise ValueError(f"burstiness must be in [0, 1), got {burstiness}")
+    rng = np.random.default_rng(seed)
+    w = np.asarray(weights if weights is not None else [1.0] * len(ids),
+                   dtype=float)
+    if len(w) != len(ids) or (w <= 0).any():
+        raise ValueError("weights must be positive, one per tenant")
+    w = w / w.sum()
+    cur = int(rng.choice(len(ids), p=w))
+    for _ in range(n_lines):
+        if rng.random() >= burstiness:
+            cur = int(rng.choice(len(ids), p=w))
+        yield ids[cur], next(gens[cur])
+
+
 def generate_multitenant(tenants, n_lines: int, seed: int = 0, *,
                          burstiness: float = 0.0, weights=None):
     """Yield ``n_lines`` interleaved ``(tenant_id, line)`` pairs — the
@@ -281,33 +316,286 @@ def generate_multitenant(tenants, n_lines: int, seed: int = 0, *,
     seed derived from the global one), so the corpus stays a pure
     function of ``(tenants, params, seed)`` — splitting the interleaved
     output by tenant reproduces exactly what each single-tenant
-    generator would emit.
-
-    ``burstiness`` in [0, 1) is the Markov stay-probability boost: after
-    emitting for tenant ``t``, the next line comes from ``t`` again with
-    probability ``burstiness + (1 - burstiness) * w[t]`` — 0 gives pure
-    weighted interleaving, values near 1 give long single-tenant runs
-    (the firehose pattern backpressure tests want). ``weights`` skews
-    the steady-state mix (defaults to uniform).
+    generator would emit. ``burstiness``/``weights`` as in
+    ``_interleave``.
     """
-    if not 0.0 <= burstiness < 1.0:
-        raise ValueError(f"burstiness must be in [0, 1), got {burstiness}")
     tenants = list(tenants)
-    rng = np.random.default_rng(seed)
-    w = np.asarray(weights if weights is not None else [1.0] * len(tenants),
-                   dtype=float)
-    if len(w) != len(tenants) or (w <= 0).any():
-        raise ValueError("weights must be positive, one per tenant")
-    w = w / w.sum()
     # distinct derived seeds: tenant streams must not be clones of each
     # other, and must not shift when the tenant list is reordered
     gens = [iter(generate_lines(name, n_lines, seed=seed + 104729 * (k + 1)))
             for k, (_tid, name) in enumerate(tenants)]
-    cur = int(rng.choice(len(tenants), p=w))
-    for _ in range(n_lines):
-        if rng.random() >= burstiness:
-            cur = int(rng.choice(len(tenants), p=w))
-        yield tenants[cur][0], next(gens[cur])
+    yield from _interleave([tid for tid, _ in tenants], gens, n_lines, seed,
+                           burstiness, weights)
+
+
+# ------------------------------------------------------------------
+# Parametric workload generator (ISSUE 10 / ROADMAP item 4).
+#
+# The five DATASETS above are *structural mimics* of fixed public logs;
+# the soak harness needs corpora whose hard parts are **knobs**: how many
+# logging statements exist, how skewed their use is, how many distinct
+# parameter values circulate (and whether that cardinality RAMPS over
+# time — ParamDict cold/hot pressure), whether statements appear/retire/
+# mutate mid-stream (template DRIFT — TemplateStore growth and
+# stream_min_support stress), how bursty the template sequence is, and
+# how often a malformed line hits the verbatim path.
+#
+# Determinism contract: ``(spec, seed) -> byte-identical stream``. All
+# per-line randomness is *counter-based* (splitmix64 over the line
+# index), so the stream is a pure function of the frozen spec + seed,
+# prefix-stable (the first k lines never depend on how many lines are
+# generated in total), and the generator holds O(n_templates) state —
+# multi-GB corpora never materialize anything proportional to their
+# length. Parameter pools are *functional*: the j-th member of a value
+# universe is computed from (seed, kind, j), never stored, so cardinality
+# can ramp into the millions at zero resident cost.
+
+_M64 = (1 << 64) - 1
+_GOLD = 0x9E3779B97F4A7C15
+
+
+def _mix(x: int) -> int:
+    """splitmix64 finalizer — the per-line counter-based rng."""
+    x &= _M64
+    x = (x ^ (x >> 30)) * 0xBF58476D1CE4E5B9 & _M64
+    x = (x ^ (x >> 27)) * 0x94D049BB133111EB & _M64
+    return x ^ (x >> 31)
+
+
+def _u01(h: int) -> float:
+    return (h >> 11) / float(1 << 53)
+
+
+_WORK_WORDS = (
+    "Receiving Received Deleting Starting Finished Verification Updating "
+    "Registered Allocated Released Committed Replicating Scanning Opened "
+    "Closed Rolling Expired Refreshing Mounting Probing Draining Sealing "
+    "block replica session shard lease segment snapshot bucket region "
+    "partition channel handle cursor volume index mapper reducer queue "
+    "worker tenant stream container manifest checkpoint journal footer "
+    "succeeded failed locally remotely upstream pending stale corrupt "
+    "for from into onto under over with without to at on retry timeout"
+).split()
+
+# parameter-slot kinds: (salt, formatter over the mixed hash)
+_WORK_KINDS = {
+    "blk": lambda h: f"blk_{h % (10 ** 18)}",
+    "ip": lambda h: f"10.{h & 255}.{(h >> 8) & 255}.{(h >> 16) & 255}",
+    "ipport": lambda h: (f"10.{h & 255}.{(h >> 8) & 255}.{(h >> 16) & 255}"
+                         f":{1024 + (h >> 24) % 64512}"),
+    "num": lambda h: str(h % (10 ** 6)),
+    "small": lambda h: str(h % 128),
+    "size": lambda h: str((512, 1024, 4096, 65536, 1048576, 67108864)[h % 6]),
+    "path": lambda h: f"/data/part-{h % 4096:05d}",
+    "hexid": lambda h: f"0x{h & 0xFFFFFFFF:08x}",
+    "dur": lambda h: f"{(h % 100_000) / 1000:.3f}",
+    "host": lambda h: f"node-{h % 2048}",
+}
+_WORK_KIND_NAMES = tuple(_WORK_KINDS)
+_MALFORMED = ("### corrupt entry ###", "", "\t", "raw dump: 0x%08x")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Frozen knob set for one synthetic workload stream.
+
+    ``n_templates``: size of the *active* logging-statement universe
+    (drift rotates membership but holds the count). ``zipf_s``: skew of
+    statement use. ``pool_size``: base cardinality of every parameter
+    kind's reuse pool; ``param_reuse`` is the fraction of draws taken
+    from the pool's hot head (``pool_size // 64`` values), the rest are
+    uniform over the *current* cardinality. ``cardinality_ramp`` grows
+    that cardinality by ``ramp * pool_size`` per 10k lines — 0 keeps the
+    closed-world reuse regime, >0 streams never-seen values at the
+    ParamDict forever. ``burstiness``: Markov stay-probability of the
+    template sequence (real logs emit statements in runs, not i.i.d.).
+    ``malformed_rate``: fraction of lines that bypass structure and hit
+    the verbatim channel. ``drift_rate``: per-line probability of a
+    drift event; a ``mutate_fraction`` of those *mutate* an active
+    statement (near-duplicate — clustering stress), the rest retire one
+    statement and introduce a brand-new one (store growth stress).
+    """
+
+    format: str = "<Date> <Time> <Pid> <Level> <Component>: <Content>"
+    n_templates: int = 64
+    zipf_s: float = 1.1
+    n_components: int = 8
+    pool_size: int = 4096
+    param_reuse: float = 0.6
+    cardinality_ramp: float = 0.0
+    burstiness: float = 0.0
+    malformed_rate: float = 0.002
+    drift_rate: float = 0.0
+    mutate_fraction: float = 0.5
+
+    def validate(self) -> "WorkloadSpec":
+        if self.n_templates < 2:
+            raise ValueError("n_templates must be >= 2")
+        if self.pool_size < 1:
+            raise ValueError("pool_size must be >= 1")
+        for name in ("param_reuse", "malformed_rate", "drift_rate",
+                     "mutate_fraction", "burstiness"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.cardinality_ramp < 0.0:
+            raise ValueError("cardinality_ramp must be >= 0")
+        return self
+
+
+def _synth_template(base: int, birth: int) -> tuple[str, tuple[str, ...]]:
+    """Deterministic logging statement #``birth``: interleaved literal
+    words and ``{}`` parameter slots -> (format string, slot kinds)."""
+    h = _mix(base ^ (birth + 1) * _GOLD)
+    n_words = 3 + h % 5
+    n_slots = (h >> 8) % 4
+    parts: list[str] = []
+    kinds: list[str] = []
+    # literal first token: keeps first-token bucketing honest
+    parts.append(_WORK_WORDS[(h >> 16) % len(_WORK_WORDS)])
+    slots_left, words_left = n_slots, n_words - 1
+    k = 1
+    while slots_left or words_left:
+        hh = _mix(h + k)
+        k += 1
+        if slots_left and (words_left == 0 or hh % 2):
+            kind = _WORK_KIND_NAMES[(hh >> 8) % len(_WORK_KIND_NAMES)]
+            kinds.append(kind)
+            parts.append("{}")
+            slots_left -= 1
+        else:
+            parts.append(_WORK_WORDS[(hh >> 8) % len(_WORK_WORDS)])
+            words_left -= 1
+    return " ".join(parts), tuple(kinds)
+
+
+def _mutate_template(tmpl: tuple[str, tuple[str, ...]],
+                     h: int) -> tuple[str, tuple[str, ...]]:
+    """A near-duplicate of ``tmpl``: one literal word swapped, or a new
+    parameter slot appended — the statement "evolved" in a code change."""
+    text, kinds = tmpl
+    parts = text.split(" ")
+    word_at = [i for i, p in enumerate(parts) if p != "{}"]
+    if h % 2 and word_at:
+        i = word_at[_mix(h + 1) % len(word_at)]
+        parts[i] = _WORK_WORDS[_mix(h + 2) % len(_WORK_WORDS)]
+        return " ".join(parts), kinds
+    kind = _WORK_KIND_NAMES[_mix(h + 3) % len(_WORK_KIND_NAMES)]
+    word = _WORK_WORDS[_mix(h + 4) % len(_WORK_WORDS)]
+    return f"{text} {word} {{}}", kinds + (kind,)
+
+
+def generate_workload(spec: WorkloadSpec, n_lines: int | None, seed: int = 0):
+    """Yield lines of the parametric workload — a pure, prefix-stable
+    function of ``(spec, seed)``; ``n_lines=None`` streams forever.
+
+    Memory is O(``spec.n_templates``) regardless of length: the only
+    sequential state is the active template set (drift) and the previous
+    template id (burstiness); every other decision is counter-based on
+    the line index.
+    """
+    spec.validate()
+    base = _mix(seed * _GOLD + 0x50A7)
+    # active statement universe: slot-indexed, drift rotates members
+    births = spec.n_templates
+    active = [_synth_template(base, b) for b in range(births)]
+    weights = _zipf_weights(spec.n_templates, spec.zipf_s)
+    cum = np.cumsum(weights)
+    cum[-1] = 1.0  # guard fp round-off at the tail
+    components = [f"svc{k}.Worker" for k in range(max(1, spec.n_components))]
+    fields = [f for f in _FMT_FIELDS(spec.format) if f != "Content"]
+    hot = max(1, spec.pool_size // 64)
+    kind_salt = {k: _mix(base ^ (i + 1) * 0xC2B2AE3D27D4EB4F)
+                 for i, k in enumerate(_WORK_KIND_NAMES)}
+    ramp_per_line = spec.cardinality_ramp * spec.pool_size / 10_000.0
+    prev_t: int | None = None
+    i = 0
+    while n_lines is None or i < n_lines:
+        h0 = _mix(base ^ (i + 1) * _GOLD)
+        # -- drift: applied BEFORE the line is emitted, sequentially ----
+        if spec.drift_rate and _u01(_mix(h0 + 1)) < spec.drift_rate:
+            hd = _mix(h0 + 2)
+            slot = hd % spec.n_templates
+            if _u01(_mix(hd + 1)) < spec.mutate_fraction:
+                active[slot] = _mutate_template(active[slot], _mix(hd + 2))
+            else:
+                active[slot] = _synth_template(base, births)  # retire + birth
+            births += 1
+            if prev_t == slot:
+                prev_t = None  # the statement it pointed at is gone
+        # -- malformed lines -> verbatim channel ------------------------
+        if _u01(_mix(h0 + 3)) < spec.malformed_rate:
+            m = _MALFORMED[_mix(h0 + 4) % len(_MALFORMED)]
+            yield m % (_mix(h0 + 5) & 0xFFFFFFFF) if "%" in m else m
+            i += 1
+            continue
+        # -- template choice: Markov burst or Zipf draw ------------------
+        if prev_t is not None and _u01(_mix(h0 + 6)) < spec.burstiness:
+            t = prev_t
+        else:
+            t = int(np.searchsorted(cum, _u01(_mix(h0 + 7)), side="right"))
+            t = min(t, spec.n_templates - 1)
+        prev_t = t
+        text, kinds = active[t]
+        # -- parameters: hot-head reuse over a (possibly ramping) pool --
+        if kinds:
+            card = spec.pool_size + int(ramp_per_line * i)
+            vals = []
+            for k, kind in enumerate(kinds):
+                hp = _mix(h0 + 16 + 2 * k)
+                j = hp % hot if _u01(_mix(h0 + 17 + 2 * k)) < spec.param_reuse \
+                    else hp % card
+                vals.append(_WORK_KINDS[kind](_mix(kind_salt[kind] + j)))
+            content = text.format(*vals)
+        else:
+            content = text
+        # -- header ------------------------------------------------------
+        line = spec.format
+        for f in fields:
+            line = line.replace(f"<{f}>", _work_header(f, i, h0, components), 1)
+        yield line.replace("<Content>", content, 1)
+        i += 1
+
+
+def _FMT_FIELDS(fmt: str) -> list[str]:
+    return re.findall(r"<(\w+)>", fmt)
+
+
+def _work_header(field: str, i: int, h0: int, components: list[str]) -> str:
+    """Deterministic header value for ``field`` at line ``i`` — known
+    names get realistic shapes (monotone Time, mostly-INFO Level, a small
+    Component pool), anything else a low-cardinality token."""
+    # zlib.crc32, not hash(): str hash is salted per process and would
+    # break the (spec, seed) -> byte-identical contract
+    h = _mix(h0 ^ zlib.crc32(field.encode()))
+    if field == "Date":
+        return "081109"
+    if field == "Time":
+        return f"{203500 + i // 100:06d}"
+    if field == "Pid":
+        return str(1 + h % 4000)
+    if field == "Level":
+        return "INFO" if _u01(h) < 0.97 else "WARN"
+    if field == "Component":
+        return components[h % len(components)]
+    return f"v{h % 997}"
+
+
+def generate_workload_multitenant(tenants, n_lines: int, seed: int = 0, *,
+                                  burstiness: float = 0.0, weights=None):
+    """Interleaved ``(tenant_id, line)`` pairs over parametric workloads
+    — the daemon-mode soak corpus.
+
+    ``tenants``: list of ``(tenant_id, WorkloadSpec)``. Seeds derive per
+    tenant exactly like ``generate_multitenant``, so splitting the
+    interleaved output by tenant reproduces what each single-tenant
+    ``generate_workload`` would emit (property-tested, drift included).
+    """
+    tenants = list(tenants)
+    gens = [iter(generate_workload(sp, None, seed=seed + 104729 * (k + 1)))
+            for k, (_tid, sp) in enumerate(tenants)]
+    yield from _interleave([tid for tid, _ in tenants], gens, n_lines, seed,
+                           burstiness, weights)
 
 
 def write_dataset(name: str, path: str, n_lines: int, seed: int = 0) -> int:

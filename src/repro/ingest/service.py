@@ -179,6 +179,18 @@ class TenantStore:
         (``on_commit`` has already GC'd covered WAL segments.)"""
         return self.session.sync()
 
+    def stats(self) -> dict:
+        """Cheap observability snapshot (soak harness / ops): WAL and
+        archive watermarks plus store growth. No locks; values may lag
+        one in-flight chunk."""
+        s = self.session.stats()
+        s.update({
+            "tenant": self.tenant,
+            "durable_seq": self.wal.durable_seq,
+            "journal_bytes": self.wal.journal_bytes(),
+        })
+        return s
+
     def maybe_force_flush(self) -> int | None:
         """Forced flush+trim for trickling tenants (DESIGN.md §15): when
         acked-but-uncommitted lines exist AND the journal is over its
@@ -416,6 +428,19 @@ class IngestDaemon:
             self._listener.bind(path)
             self.address = path
         self._listener.listen(64)
+
+    def stats(self) -> dict:
+        """Per-tenant observability snapshot (soak harness / ops)."""
+        with self._lock:
+            workers = dict(self._workers)
+        out = {}
+        for tid, w in workers.items():
+            s = w.store.stats()
+            s["queue_depth"] = w.queue.qsize()
+            s["paused"] = w.paused
+            s["failed"] = repr(w.failed) if w.failed is not None else None
+            out[tid] = s
+        return out
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "IngestDaemon":

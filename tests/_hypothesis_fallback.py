@@ -5,8 +5,8 @@ dependencies must not be installed ad hoc, so ``conftest.py`` registers
 this module as ``hypothesis`` / ``hypothesis.strategies`` when the real
 package is missing. It implements exactly the surface the test-suite
 uses (``given``, ``settings``, ``integers``, ``lists``, ``text``,
-``characters``, ``one_of``, ``just``, ``sampled_from``, ``.map``,
-``.filter``) as a
+``characters``, ``one_of``, ``just``, ``sampled_from``, ``builds``,
+``.map``, ``.filter``) as a
 deterministic seeded random sampler: no shrinking, no database, but the
 same property checks run over a few hundred examples. With the real
 hypothesis installed this module is never imported.
@@ -62,6 +62,15 @@ def one_of(*strategies: Strategy) -> Strategy:
     return Strategy(lambda rng: rng.choice(strategies)._draw(rng))
 
 
+def builds(target, *arg_strategies: Strategy, **kw_strategies: Strategy) -> Strategy:
+    def draw(rng):
+        args = [s._draw(rng) for s in arg_strategies]
+        kwargs = {k: s._draw(rng) for k, s in kw_strategies.items()}
+        return target(*args, **kwargs)
+
+    return Strategy(draw)
+
+
 def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
     def draw(rng):
         n = rng.randint(min_size, max_size)
@@ -109,7 +118,7 @@ def text(alphabet: Strategy | str | None = None, min_size: int = 0, max_size: in
     return Strategy(draw)
 
 
-def given(*strategies: Strategy):
+def given(*strategies: Strategy, **kw_strategies: Strategy):
     def deco(fn):
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
@@ -117,11 +126,12 @@ def given(*strategies: Strategy):
             for i in range(n):
                 rng = random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
                 drawn = tuple(s._draw(rng) for s in strategies)
+                kw_drawn = {k: s._draw(rng) for k, s in kw_strategies.items()}
                 try:
-                    fn(*args, *drawn, **kwargs)
+                    fn(*args, *drawn, **kwargs, **kw_drawn)
                 except BaseException:
-                    print(f"falsifying example ({fn.__name__}, run {i}): {drawn!r}",
-                          file=sys.stderr)
+                    print(f"falsifying example ({fn.__name__}, run {i}): "
+                          f"{drawn!r} {kw_drawn!r}", file=sys.stderr)
                     raise
 
         wrapper._hyp_max_examples = _DEFAULT_EXAMPLES

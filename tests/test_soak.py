@@ -1,0 +1,79 @@
+"""Soak harness (benchmarks/soak.py, DESIGN.md §17): report schema,
+growth metrics, and the gate script's verdicts — at toy scale so tier-1
+stays fast; the real 100 MB smoke runs as its own CI job."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import benchmarks.soak as soak
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GATE = os.path.join(ROOT, "scripts", "check_soak_gate.py")
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+@pytest.fixture(scope="module")
+def report(tmp_path_factory):
+    spec = dataclasses.replace(soak.SOAK_SPEC, drift_rate=0.002)
+    rep = soak.run(400_000, spec=spec, seed=1)
+    p = tmp_path_factory.mktemp("soak") / "BENCH_soak.json"
+    soak.write_report(rep, str(p))
+    return rep, str(p)
+
+
+def test_report_schema(report):
+    rep, _path = report
+    r = rep["runs"]["stream"]
+    for key in ("n_lines", "raw_bytes", "compressed_bytes", "compression_ratio",
+                "wall_s", "lines_per_sec", "mb_per_sec", "latency_ms",
+                "rss_mb", "growth", "curve", "interpret_mode", "backends"):
+        assert key in r, key
+    assert r["raw_bytes"] >= 400_000
+    assert r["compression_ratio"] > 1.0
+    assert set(r["latency_ms"]) == {"p50", "p95", "p99", "max"}
+    assert r["latency_ms"]["p50"] <= r["latency_ms"]["p99"] <= r["latency_ms"]["max"]
+    assert r["rss_mb"]["peak"] >= r["rss_mb"]["start"] > 0
+    assert r["curve"][-1]["templates"] == r["growth"]["templates_final"] > 0
+    # round-trips as JSON (the CI artifact)
+    json.loads(json.dumps(rep))
+
+
+def _gate(path, *flags):
+    return subprocess.run(
+        [sys.executable, GATE, "--report", path, *flags],
+        capture_output=True, text=True, timeout=120, env=ENV)
+
+
+def test_gate_passes_scaled_thresholds(report):
+    _rep, path = report
+    # toy-scale thresholds: the base template universe has not amortized
+    # at 400 kB, so density runs far above the 100 MB smoke cap
+    r = _gate(path, "--rss-cap-mb", "4096", "--p99-cap-ms", "60000",
+              "--cr-floor", "2.0", "--growth-ratio-cap", "0.9",
+              "--templates-per-1k-cap", "50")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "all checks passed" in r.stdout
+
+
+def test_gate_fails_and_reports(report):
+    _rep, path = report
+    r = _gate(path, "--rss-cap-mb", "1", "--cr-floor", "1e9")
+    assert r.returncode == 1
+    assert "FAIL" in r.stdout and "peak RSS" in r.stdout
+
+
+def test_cli_smoke_entrypoint(tmp_path):
+    # the exact invocation shape CI uses, at toy size
+    out = tmp_path / "BENCH_soak.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.soak", "--mb", "0.3",
+         "--quiet", "--out", str(out)],
+        capture_output=True, text=True, timeout=600, env=ENV, cwd=ROOT)
+    assert r.returncode == 0, r.stderr
+    rep = json.loads(out.read_text())
+    assert rep["benchmark"] == "soak" and "stream" in rep["runs"]
